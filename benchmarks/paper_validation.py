@@ -1,0 +1,235 @@
+"""Paper-validation benchmarks: one function per HPDedup table/figure.
+
+Each returns a list of result-dict rows (also printed as CSV by run.py).
+Workloads are synthesized to the paper's Table III statistics (see
+repro.core.traces); sizes default to a CPU-friendly scale and grow with
+--full.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Dict, List
+
+import numpy as np
+
+from repro.core import (
+    DIODE,
+    HPDedup,
+    PurePostProcessing,
+    generate_workload,
+    make_idedup,
+    trace_stats,
+)
+from repro.core.ffh import occurrence_counts
+from repro.core.unseen import unseen_estimate_from_counts, unseen_estimate_jax_from_counts
+
+_TRACES: Dict = {}
+
+
+def _trace(wl: str, n: int, seed: int = 0):
+    key = (wl, n, seed)
+    if key not in _TRACES:
+        _TRACES[key] = generate_workload(wl, total_requests=n, seed=seed)
+    return _TRACES[key]
+
+
+# ---------------------------------------------------------------------------
+# Fig. 6 — inline dedup ratio vs cache size, iDedup vs HPDedup{LRU,LFU,ARC}.
+# ---------------------------------------------------------------------------
+
+
+def bench_cache_efficiency(n_requests: int = 250_000) -> List[dict]:
+    rows = []
+    for wl in ("A", "B", "C"):
+        trace, _ = _trace(wl, n_requests)
+        for cache in (1024, 2048, 4096, 8192):
+            ide = make_idedup(cache_entries=cache)
+            ide.replay(trace)
+            r_ide = ide.finish(run_post_to_exact=False).inline_dedup_ratio
+            row = {"figure": "fig6", "workload": wl, "cache": cache, "iDedup": round(r_ide, 4)}
+            for policy in ("lru", "lfu", "arc"):
+                hp = HPDedup(cache_entries=cache, policy=policy,
+                             adaptive_threshold=False, fixed_threshold=4)
+                hp.replay(trace)
+                row[f"HPDedup-{policy.upper()}"] = round(
+                    hp.finish(run_post_to_exact=False).inline_dedup_ratio, 4
+                )
+            rows.append(row)
+    return rows
+
+
+# ---------------------------------------------------------------------------
+# Fig. 7 — peak disk capacity: HPDedup vs pure post-processing.
+# ---------------------------------------------------------------------------
+
+
+def bench_capacity(n_requests: int = 250_000, cache: int = 4096) -> List[dict]:
+    rows = []
+    for wl in ("A", "B", "C"):
+        trace, _ = _trace(wl, n_requests)
+        hp = HPDedup(cache_entries=cache, adaptive_threshold=False, fixed_threshold=4)
+        hp.replay(trace)
+        peak_hp = hp.finish().peak_disk_blocks
+        pp = PurePostProcessing().replay(trace)
+        rep = pp.finish()
+        rows.append({
+            "figure": "fig7", "workload": wl,
+            "hpdedup_peak_blocks": peak_hp,
+            "postproc_peak_blocks": rep.peak_disk_blocks,
+            "unique_blocks": rep.final_disk_blocks,
+            "capacity_reduction": round(1 - peak_hp / rep.peak_disk_blocks, 4),
+        })
+    return rows
+
+
+# ---------------------------------------------------------------------------
+# Table IV — average hits of cached fingerprints: baseline / DIODE / HPDedup.
+# ---------------------------------------------------------------------------
+
+
+def bench_avg_hits(n_requests: int = 250_000) -> List[dict]:
+    rows = []
+    for wl in ("A", "B", "C"):
+        trace, stream_of = _trace(wl, n_requests)
+        for cache in (2048, 4096):
+            base = make_idedup(cache_entries=cache, threshold=1)
+            base.replay(trace)
+            rb = base.finish(run_post_to_exact=False)
+            dio = DIODE(cache_entries=cache, stream_templates=stream_of)
+            dio.replay(trace)
+            rd = dio.finish()
+            hp = HPDedup(cache_entries=cache, adaptive_threshold=False, fixed_threshold=1)
+            hp.replay(trace)
+            rh = hp.finish()
+            rows.append({
+                "figure": "table4", "workload": wl, "cache": cache,
+                "baseline": round(rb.avg_hits_of_cached_fingerprints, 3),
+                "DIODE": round(rd.avg_hits_of_cached_fingerprints, 3),
+                "HPDedup": round(rh.avg_hits_of_cached_fingerprints, 3),
+            })
+    return rows
+
+
+# ---------------------------------------------------------------------------
+# Fig. 4 — RS-only vs RS+Unseen LDSS estimation quality (inline ratio).
+# ---------------------------------------------------------------------------
+
+
+def bench_estimation_quality(n_requests: int = 150_000, cache: int = 2048) -> List[dict]:
+    rows = []
+    for wl in ("A", "B", "C"):
+        trace, _ = _trace(wl, n_requests)
+        for factor in (0.2, 0.4, 0.6):
+            row = {"figure": "fig4", "workload": wl, "interval_factor": factor}
+            for mode, use_unseen in (("rs_only", False), ("rs_unseen", True)):
+                hp = HPDedup(cache_entries=cache, adaptive_threshold=False,
+                             fixed_threshold=4, interval_factor=factor,
+                             use_unseen=use_unseen)
+                # freeze the interval factor (disable the 1-d self-tuning)
+                hp.inline.estimator.cache_entries = cache
+                hp.replay(trace)
+                row[mode] = round(hp.finish(run_post_to_exact=False).inline_dedup_ratio, 4)
+            rows.append(row)
+    return rows
+
+
+# ---------------------------------------------------------------------------
+# Fig. 9 — LDSS estimation accuracy per stream template.
+# ---------------------------------------------------------------------------
+
+
+def bench_ldss_accuracy(n_requests: int = 100_000) -> List[dict]:
+    trace, stream_of = _trace("B", n_requests, seed=7)
+    # ground truth LDSS per stream over the whole trace
+    from collections import Counter, defaultdict
+
+    per_stream = defaultdict(list)
+    for rec in trace:
+        if rec["op"] == 0:
+            per_stream[int(rec["stream"])].append(int(rec["fp"]))
+    rows = []
+    rng = np.random.default_rng(0)
+    for sid, fps in sorted(per_stream.items()):
+        fps = np.asarray(fps, dtype=np.uint64)
+        if fps.size < 2000:
+            continue
+        window = fps[-8192:]
+        true_ldss = window.size - len(np.unique(window))
+        sample = rng.choice(window, size=max(64, int(0.15 * window.size)), replace=False)
+        counts = occurrence_counts(sample)
+        est_ref = max(0.0, window.size - unseen_estimate_from_counts(counts, window.size))
+        est_jax = max(0.0, window.size - float(
+            unseen_estimate_jax_from_counts([counts], np.array([window.size]))[0]))
+        rows.append({
+            "figure": "fig9", "stream": sid, "template": stream_of[sid],
+            "true_ldss": int(true_ldss), "est_ref": round(est_ref, 1),
+            "est_jax": round(est_jax, 1),
+            "rel_err_ref": round(abs(est_ref - true_ldss) / max(true_ldss, 1), 3),
+        })
+    return rows
+
+
+# ---------------------------------------------------------------------------
+# Fig. 5 / Fig. 10 — dedup ratio vs threshold; adaptive thresholds per stream.
+# ---------------------------------------------------------------------------
+
+
+def bench_threshold(n_requests: int = 120_000) -> List[dict]:
+    rows = []
+    for tpl in ("mail", "ftp", "web", "home"):
+        trace, _ = generate_workload("A", total_requests=n_requests // 2, seed=11, mix={tpl: 4})
+        for t in (1, 2, 4, 8, 16):
+            hp = HPDedup(cache_entries=8192, adaptive_threshold=False, fixed_threshold=t)
+            hp.replay(trace)
+            rows.append({
+                "figure": "fig5", "template": tpl, "threshold": t,
+                "inline_ratio": round(hp.finish(run_post_to_exact=False).inline_dedup_ratio, 4),
+            })
+    # Fig. 10: adaptive per-stream thresholds after replay
+    trace, stream_of = _trace("A", n_requests)
+    hp = HPDedup(cache_entries=4096, adaptive_threshold=True)
+    hp.replay(trace)
+    by_tpl: Dict[str, List[float]] = {}
+    for sid, tname in stream_of.items():
+        if sid in hp.inline.thresholds.threshold:
+            by_tpl.setdefault(tname, []).append(hp.inline.thresholds.threshold[sid])
+    for tname, ts in sorted(by_tpl.items()):
+        rows.append({
+            "figure": "fig10", "template": tname,
+            "adaptive_threshold_mean": round(float(np.mean(ts)), 2),
+            "inline_ratio": round(hp.finish(run_post_to_exact=False).inline_dedup_ratio, 4),
+        })
+    return rows
+
+
+# ---------------------------------------------------------------------------
+# Fig. 11 — overheads: FFH build time and estimation time per interval.
+# ---------------------------------------------------------------------------
+
+
+def bench_overhead() -> List[dict]:
+    rows = []
+    rng = np.random.default_rng(0)
+    for interval in (65_536, 262_144, 1_048_576):
+        k = int(0.15 * interval)
+        fps = rng.integers(1, interval // 4, size=k).astype(np.uint64)
+        t0 = time.perf_counter()
+        counts = occurrence_counts(fps)
+        t_hist = (time.perf_counter() - t0) * 1e3
+        t0 = time.perf_counter()
+        unseen_estimate_from_counts(counts, interval)
+        t_est_ref = (time.perf_counter() - t0) * 1e3
+        # batched jax path: 32 streams at once (the production configuration)
+        counts32 = [counts] * 32
+        unseen_estimate_jax_from_counts(counts32, np.full(32, interval))  # warm
+        t0 = time.perf_counter()
+        unseen_estimate_jax_from_counts(counts32, np.full(32, interval))
+        t_est_jax32 = (time.perf_counter() - t0) * 1e3
+        rows.append({
+            "figure": "fig11", "interval": interval, "samples": k,
+            "histogram_ms": round(t_hist, 2),
+            "estimate_ref_ms_per_stream": round(t_est_ref, 2),
+            "estimate_jax_ms_32streams": round(t_est_jax32, 2),
+        })
+    return rows

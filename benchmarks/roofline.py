@@ -1,0 +1,98 @@
+"""Roofline table generator: reads the dry-run JSON and renders §Roofline.
+
+Terms (per device, per step; constants: 197 TFLOP/s bf16, 819 GB/s HBM,
+~49.5 GB/s/link ICI):
+
+  compute_s    = HLO_FLOPs / peak_FLOPs
+  memory_s     = HLO bytes accessed / HBM_bw
+  collective_s = collective wire bytes / ICI_bw
+
+plus MODEL_FLOPS = 6*N_active*D (train; 2*N*D serve) and the useful-compute
+ratio MODEL_FLOPS / (chips * HLO_FLOPs) that exposes remat/dispatch waste.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+from typing import Dict, List, Optional
+
+
+def load_records(*paths: str) -> List[dict]:
+    recs: Dict = {}
+    for p in paths:
+        if not os.path.exists(p):
+            continue
+        for r in json.load(open(p)):
+            key = (r["arch"], r["shape"], r["mesh"], r.get("variant", ""))
+            # later files override earlier (fix-up runs, perf variants)
+            if key not in recs or r.get("status") == "ok":
+                recs[key] = r
+    return list(recs.values())
+
+
+def fmt_table(recs: List[dict], mesh: str = "16x16") -> str:
+    hdr = ("| arch | shape | peak GiB/dev | fits | compute ms | memory ms | "
+           "collective ms | dominant | useful-FLOPs ratio |")
+    sep = "|" + "---|" * 9
+    lines = [hdr, sep]
+    for r in sorted(recs, key=lambda r: (r["arch"], r["shape"])):
+        if r["mesh"] != mesh:
+            continue
+        if r.get("status") == "skipped":
+            lines.append(f"| {r['arch']} | {r['shape']} | — | — | — | — | — | skipped: {r['reason'][:40]} | — |")
+            continue
+        if r.get("status") != "ok":
+            lines.append(f"| {r['arch']} | {r['shape']} | — | — | — | — | — | FAILED | — |")
+            continue
+        peak = r["bytes_per_device"]["peak"] / 2**30
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {peak:.2f} | {'Y' if r['fits_hbm'] else 'N'} "
+            f"| {r['compute_s']*1e3:.2f} | {r['memory_s']*1e3:.2f} | {r['collective_s']*1e3:.2f} "
+            f"| {r['dominant']} | {r['useful_flops_ratio']:.3f} |"
+        )
+    return "\n".join(lines)
+
+
+def summary(recs: List[dict]) -> dict:
+    ok = [r for r in recs if r.get("status") == "ok"]
+    doms: Dict[str, int] = {}
+    for r in ok:
+        doms[r["dominant"]] = doms.get(r["dominant"], 0) + 1
+    fits = sum(1 for r in ok if r.get("fits_hbm"))
+    return {
+        "cells_ok": len(ok),
+        "cells_skipped": sum(1 for r in recs if r.get("status") == "skipped"),
+        "cells_failed": sum(1 for r in recs if r.get("status") == "failed"),
+        "fits_hbm": fits,
+        "dominant_term_histogram": doms,
+    }
+
+
+def rows_for_run(paths=("results/dryrun_baseline.json",)) -> List[dict]:
+    recs = load_records(*paths)
+    out = []
+    for r in recs:
+        if r.get("status") != "ok":
+            continue
+        out.append({
+            "bench": "roofline", "arch": r["arch"], "shape": r["shape"], "mesh": r["mesh"],
+            "peak_gib": round(r["bytes_per_device"]["peak"] / 2**30, 2),
+            "compute_ms": round(r["compute_s"] * 1e3, 2),
+            "memory_ms": round(r["memory_s"] * 1e3, 2),
+            "collective_ms": round(r["collective_s"] * 1e3, 2),
+            "dominant": r["dominant"],
+            "useful_flops_ratio": round(r["useful_flops_ratio"], 4),
+        })
+    return out
+
+
+if __name__ == "__main__":
+    recs = load_records("results/dryrun_baseline.json")
+    print(summary(recs))
+    print()
+    print("## 16x16 single pod")
+    print(fmt_table(recs, "16x16"))
+    print()
+    print("## 2x16x16 multi-pod")
+    print(fmt_table(recs, "2x16x16"))

@@ -1,0 +1,79 @@
+"""Benchmark driver: one section per paper table/figure + kernels + roofline.
+
+Prints ``name,us_per_call,derived`` CSV rows (per the repo convention):
+``name`` identifies the figure/bench and parameters, ``us_per_call`` is the
+primary timing where meaningful (0 for ratio-style results), ``derived``
+packs the figure's headline quantity.
+
+Usage: PYTHONPATH=src python -m benchmarks.run [--full] [--only fig6,...]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+
+from . import kernel_bench, paper_validation, roofline
+
+
+def _emit(rows, primary=None):
+    for row in rows:
+        name_bits = []
+        derived_bits = []
+        us = 0.0
+        for k, v in row.items():
+            if k in ("figure", "bench"):
+                name_bits.insert(0, str(v))
+            elif isinstance(v, str) or k in ("workload", "cache", "template", "threshold",
+                                             "interval", "interval_factor", "stream", "blocks",
+                                             "words", "counts", "arch", "shape", "mesh"):
+                name_bits.append(f"{k}={v}")
+            else:
+                if "us" in k or "ms" in k:
+                    if primary and k == primary:
+                        us = float(v) * (1e3 if "ms" in k else 1.0)
+                derived_bits.append(f"{k}={v}")
+        print(f"{'/'.join(name_bits)},{us},{';'.join(derived_bits)}")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true", help="paper-scale workloads (slower)")
+    ap.add_argument("--only", default="", help="comma list: fig4,fig5,fig6,fig7,fig9,fig10,fig11,table4,kernels,roofline")
+    args = ap.parse_args()
+    n = 600_000 if args.full else 250_000
+    only = set(args.only.split(",")) if args.only else None
+
+    def want(tag):
+        return only is None or tag in only
+
+    print("name,us_per_call,derived")
+    t0 = time.time()
+    if want("fig6"):
+        _emit(paper_validation.bench_cache_efficiency(n))
+    if want("fig7"):
+        _emit(paper_validation.bench_capacity(n))
+    if want("table4"):
+        _emit(paper_validation.bench_avg_hits(n))
+    if want("fig4"):
+        _emit(paper_validation.bench_estimation_quality(max(n // 2, 100_000)))
+    if want("fig9"):
+        _emit(paper_validation.bench_ldss_accuracy(max(n // 2, 100_000)))
+    if want("fig5") or want("fig10"):
+        _emit(paper_validation.bench_threshold(max(n // 2, 100_000)))
+    if want("fig11"):
+        _emit(paper_validation.bench_overhead())
+    if want("kernels"):
+        _emit(kernel_bench.bench_fingerprint(), primary="us_per_call_interpret")
+        _emit(kernel_bench.bench_ffh(), primary="us_per_call_interpret")
+        _emit(kernel_bench.bench_paged_attention(), primary="us_per_call_interpret")
+        _emit(kernel_bench.bench_ingest_dataplane())
+    if want("roofline"):
+        _emit(roofline.rows_for_run())
+    print(f"# total bench time: {time.time()-t0:.1f}s", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,69 @@
+"""End-to-end driver: train a ~100M-param llama-family model for a few
+hundred steps on the deduplicated multi-tenant pipeline, with checkpointing.
+
+Full run (a few hours on this CPU container; minutes on one TPU host):
+  PYTHONPATH=src python examples/train_e2e.py --steps 300
+Short demo:
+  PYTHONPATH=src python examples/train_e2e.py --steps 40 --d-model 256
+"""
+
+import argparse
+
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.data.pipeline import DedupIngestPipeline, TenantSpec
+from repro.models import build_model
+from repro.train.optimizer import AdamW
+from repro.train.trainer import Trainer, TrainerConfig
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--d-model", type=int, default=512)
+    ap.add_argument("--layers", type=int, default=8)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_e2e_ckpt")
+    args = ap.parse_args()
+
+    cfg = get_config("tinyllama-1.1b").replace(
+        name="llama-e2e",
+        num_layers=args.layers,
+        d_model=args.d_model,
+        num_heads=max(4, args.d_model // 64),
+        num_kv_heads=max(2, args.d_model // 128),
+        head_dim=64,
+        d_ff=args.d_model * 3,
+        vocab_size=32000,
+    )
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    n = sum(int(np.prod(p.shape)) for p in jax.tree.leaves(params))
+    print(f"model: {n/1e6:.1f}M params; {args.steps} steps of {args.batch}x{args.seq}")
+
+    tenants = [
+        TenantSpec(0, rate=3.0, dup_ratio=0.8, locality="good", overlap_group="g"),
+        TenantSpec(1, rate=2.0, dup_ratio=0.1, locality="weak", overlap_group="g"),
+        TenantSpec(2, rate=1.0, dup_ratio=0.5, locality="good"),
+    ]
+    pipe = DedupIngestPipeline(tenants, block_tokens=64, vocab=cfg.vocab_size, cache_entries=8192)
+    trainer = Trainer(
+        model,
+        AdamW(learning_rate=3e-4, warmup_steps=20, total_steps=args.steps),
+        params,
+        pipe.batches(args.batch, args.seq),
+        TrainerConfig(steps=args.steps, ckpt_dir=args.ckpt_dir, ckpt_every=50, log_every=10),
+        pipeline_state_fn=pipe.state_dict,
+        pipeline_restore_fn=pipe.load_state,
+    )
+    out = trainer.run()
+    m = pipe.metrics
+    print(f"\nloss {out['losses'][0]:.3f} -> {out['losses'][-1]:.3f} over {out['final_step']} steps")
+    print(f"dedup saved {m.dedup_saving:.1%} of ingested blocks from ever reaching training")
+
+
+if __name__ == "__main__":
+    main()

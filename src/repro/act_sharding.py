@@ -1,0 +1,103 @@
+"""Activation sharding constraints by logical dimension names.
+
+Model code annotates key activations (residual stream, attention carries,
+MoE dispatch buffers) with logical names via ``shard_act(x, names)``; the
+launcher activates a rule table for the current mesh with
+``activation_rules(...)``.  Outside any context (unit tests, single-device
+smoke runs) ``shard_act`` is a no-op, so model code stays mesh-agnostic.
+
+This is what keeps scan carries sharded: without explicit constraints the
+SPMD partitioner frequently replicates loop state (observed: a 19 GiB/device
+flash-attention accumulator on a 1.1B model — see EXPERIMENTS.md §Dry-run).
+"""
+
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Dict, Optional, Sequence, Tuple, Union
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+AxisSpec = Union[None, str, Tuple[str, ...]]
+
+# Baseline rule table (the dry-run default; perf variants override).
+DEFAULT_ACT_RULES: Dict[str, AxisSpec] = {
+    "batch": ("pod", "data"),
+    "seq": "model",             # sequence-parallel residual stream (None = off)
+    "attn_seq": None,           # seq dim *inside* mixers (heads take "model")
+    "heads": "model",
+    "kv_heads": "model",
+    "embed_act": None,
+    "ff_act": "model",
+    "vocab_act": "model",
+    "experts_act": "model",
+    "moe_cap": ("data", "model"),
+    "rnn_act": "model",
+    "kv_seq": None,
+}
+
+_state = threading.local()
+
+
+@contextlib.contextmanager
+def activation_rules(mesh: Mesh, rules: Optional[Dict[str, AxisSpec]] = None):
+    merged = dict(DEFAULT_ACT_RULES)
+    if rules:
+        merged.update(rules)
+    prev = getattr(_state, "ctx", None)
+    _state.ctx = (mesh, merged)
+    try:
+        yield
+    finally:
+        _state.ctx = prev
+
+
+def _axes_fit(dim: int, axes: Tuple[str, ...], mesh: Mesh) -> bool:
+    total = int(np.prod([mesh.shape[a] for a in axes]))
+    return dim % total == 0 and dim > 0
+
+
+def active_mesh() -> Optional[Mesh]:
+    """The mesh of the enclosing ``activation_rules`` context (None outside)."""
+    ctx = getattr(_state, "ctx", None)
+    return ctx[0] if ctx else None
+
+
+def batch_mesh_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh.shape)
+
+
+def shard_act(x, names: Sequence[Optional[str]]):
+    """Constrain ``x``'s sharding by logical dim names (no-op w/o context)."""
+    ctx = getattr(_state, "ctx", None)
+    if ctx is None:
+        return x
+    mesh, rules = ctx
+    if x.ndim != len(names):
+        raise ValueError(f"rank mismatch: {x.shape} vs names {names}")
+    used = set()
+    dims = []
+    for dim, name in zip(x.shape, names):
+        spec: AxisSpec = rules.get(name) if name else None
+        if spec is None:
+            dims.append(None)
+            continue
+        axes = (spec,) if isinstance(spec, str) else tuple(spec)
+        axes = tuple(a for a in axes if a in mesh.shape and a not in used)
+        if not axes or not _axes_fit(dim, axes, mesh):
+            # try single-axis fallbacks in order
+            picked = None
+            for a in axes:
+                if _axes_fit(dim, (a,), mesh):
+                    picked = (a,)
+                    break
+            axes = picked or ()
+        if axes:
+            used.update(axes)
+            dims.append(axes if len(axes) > 1 else axes[0])
+        else:
+            dims.append(None)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, P(*dims)))

@@ -1,0 +1,6 @@
+"""Assigned-architecture configs and input shapes."""
+
+from .registry import ARCH_IDS, get_config
+from .shapes import SHAPES, SMOKE_SHAPES, ShapeSpec
+
+__all__ = ["ARCH_IDS", "get_config", "SHAPES", "SMOKE_SHAPES", "ShapeSpec"]

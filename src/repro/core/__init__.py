@@ -1,0 +1,72 @@
+"""HPDedup core: the paper's contribution as a composable library.
+
+Public surface:
+
+* ``HPDedup`` / ``HybridReport`` — the hybrid prioritized dedup mechanism.
+* ``StreamLocalityEstimator`` — reservoir + unseen-estimator LDSS tracking.
+* ``PrioritizedCache`` / ``GlobalCache`` — fingerprint caches.
+* ``SpatialThreshold`` — per-stream adaptive duplicate-sequence threshold.
+* ``BlockStore`` / ``PostProcessEngine`` — storage substrate + exact phase.
+* baselines: ``make_idedup``, ``PurePostProcessing``, ``DIODE``.
+* ``generate_workload`` — FIU-like synthetic multi-tenant traces.
+"""
+
+from .baselines import DIODE, PurePostProcessing, make_idedup
+from .cache import ARCCache, GlobalCache, LFUCache, LRUCache, PrioritizedCache
+from .ffh import ffh_from_counts, ffh_from_sample, occurrence_counts
+from .fingerprint import OP_READ, OP_WRITE, TRACE_DTYPE, host_fingerprint
+from .hybrid import HPDedup, HybridReport
+from .inline_engine import InlineDedupEngine
+from .ldss import HoltPredictor, StreamLocalityEstimator
+from .postprocess import PostProcessEngine
+from .reservoir import Reservoir
+from .segment_tree import FenwickSegments
+from .store import BlockStore
+from .threshold import SpatialThreshold
+from .traces import TEMPLATES, WORKLOADS, generate_workload, trace_stats
+from .unseen import (
+    ldss_batch,
+    ldss_from_counts,
+    unseen_estimate_from_counts,
+    unseen_estimate_jax,
+    unseen_estimate_jax_from_counts,
+    unseen_estimate_ref,
+)
+
+__all__ = [
+    "DIODE",
+    "PurePostProcessing",
+    "make_idedup",
+    "ARCCache",
+    "GlobalCache",
+    "LFUCache",
+    "LRUCache",
+    "PrioritizedCache",
+    "ffh_from_counts",
+    "ffh_from_sample",
+    "occurrence_counts",
+    "OP_READ",
+    "OP_WRITE",
+    "TRACE_DTYPE",
+    "host_fingerprint",
+    "HPDedup",
+    "HybridReport",
+    "InlineDedupEngine",
+    "HoltPredictor",
+    "StreamLocalityEstimator",
+    "PostProcessEngine",
+    "Reservoir",
+    "FenwickSegments",
+    "BlockStore",
+    "SpatialThreshold",
+    "TEMPLATES",
+    "WORKLOADS",
+    "generate_workload",
+    "trace_stats",
+    "ldss_batch",
+    "ldss_from_counts",
+    "unseen_estimate_from_counts",
+    "unseen_estimate_jax",
+    "unseen_estimate_jax_from_counts",
+    "unseen_estimate_ref",
+]

@@ -1,0 +1,201 @@
+"""Baselines the paper compares against (§V).
+
+* ``IDedup`` — locality-based inline-only dedup (Srinivasan et al. FAST'12):
+  one global LRU fingerprint cache over the mixed stream, fixed sequence
+  threshold (4 in the paper's experiments), no post-processing (non-exact).
+* ``PurePostProcessing`` — every write lands on disk; an idle-time pass
+  dedups afterwards (El-Shimi et al. ATC'12 / DEDIS).  Exact, but peak
+  capacity = the full undeduplicated footprint.
+* ``DIODE`` — dynamic inline-offline dedup (Tang et al. MASCOTS'16):
+  file-extension classes decide whether a block enters the inline path
+  (P-type — compressed/encrypted/media — bypasses it), with a single global
+  adaptive threshold.  We model the extension hint as a deterministic
+  per-fingerprint classification with the template's P-type fraction
+  (Cloud-FTP: 14.2%, per the paper).
+
+All three run over the same ``BlockStore`` and report the same metrics as
+HPDedup so benchmark tables compare like for like.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+import numpy as np
+
+from .cache import GlobalCache
+from .fingerprint import OP_WRITE, TRACE_DTYPE
+from .hybrid import HPDedup, HybridReport
+from .inline_engine import InlineMetrics
+from .postprocess import PostProcessEngine, PostProcessMetrics
+from .store import BlockStore
+from .threshold import SpatialThreshold
+from .traces import TEMPLATES, is_ptype
+
+
+def make_idedup(cache_entries: int, threshold: int = 4, policy: str = "lru", seed: int = 0) -> HPDedup:
+    """iDedup = HPDedup minus prioritization, adaptivity and post-processing."""
+    return HPDedup(
+        cache_entries=cache_entries,
+        policy=policy,
+        adaptive_threshold=False,
+        fixed_threshold=threshold,
+        prioritized=False,
+        seed=seed,
+    )
+
+
+class PurePostProcessing:
+    """No inline phase: writes land on disk; dedup happens in idle time."""
+
+    def __init__(self):
+        self.store = BlockStore()
+        self.post = PostProcessEngine(self.store)
+        self.metrics = InlineMetrics()
+        self._total_writes = 0
+        self._dup_writes = 0
+        self._seen: set = set()
+
+    def replay(self, trace: np.ndarray) -> "PurePostProcessing":
+        assert trace.dtype == TRACE_DTYPE
+        for rec in trace:
+            if rec["op"] != OP_WRITE:
+                self.store.read(int(rec["stream"]), int(rec["lba"]))
+                continue
+            stream, lba, fp = int(rec["stream"]), int(rec["lba"]), int(rec["fp"])
+            self._total_writes += 1
+            if fp in self._seen:
+                self._dup_writes += 1
+            else:
+                self._seen.add(fp)
+            self.store.write_new_block(stream, lba, fp)
+            self.metrics.writes += 1
+        return self
+
+    def finish(self) -> HybridReport:
+        self.post.run_to_exact()
+        return HybridReport(
+            inline=self.metrics,
+            post=self.post.metrics,
+            peak_disk_blocks=self.store.peak_blocks,
+            final_disk_blocks=self.store.live_blocks,
+            unique_fingerprints=self.store.unique_fingerprints(),
+            total_writes=self._total_writes,
+            total_dup_writes=self._dup_writes,
+        )
+
+
+class DIODE:
+    """File-type-hinted hybrid dedup with one global adaptive threshold."""
+
+    def __init__(
+        self,
+        cache_entries: int,
+        stream_templates: Optional[Dict[int, str]] = None,
+        policy: str = "lru",
+        seed: int = 0,
+    ):
+        self.store = BlockStore()
+        self.cache = GlobalCache(cache_entries, policy=policy)
+        self.post = PostProcessEngine(self.store)
+        self.metrics = InlineMetrics()
+        self.thresholds = SpatialThreshold()  # single pseudo-stream -1 = global
+        self.stream_templates = stream_templates or {}
+        self._total_writes = 0
+        self._dup_writes = 0
+        self._seen: set = set()
+        self._run: list = []
+        self._run_next_lba: Optional[int] = None
+        self._run_stream: Optional[int] = None
+        self._writes_since_update = 0
+
+    def _ptype_fraction(self, stream: int) -> float:
+        tname = self.stream_templates.get(stream)
+        if tname is None:
+            return 0.0
+        return TEMPLATES[tname].ptype_fraction
+
+    # -- write path -------------------------------------------------------------
+    def _flush_run(self) -> None:
+        if not self._run:
+            return
+        t = self.thresholds.get(-1)
+        self.thresholds.record_dup_run(-1, len(self._run))
+        if len(self._run) >= t:
+            for stream, lba, fp, pba in self._run:
+                self.store.map_duplicate(stream, lba, pba)
+                self.metrics.inline_dups += 1
+        else:
+            for stream, lba, fp, pba in self._run:
+                self._write_through(stream, lba, fp)
+        self._run = []
+        self._run_next_lba = None
+        self._run_stream = None
+
+    def _write_through(self, stream: int, lba: int, fp: int) -> None:
+        pba = self.store.write_new_block(stream, lba, fp)
+        self.cache.admit(stream, fp, pba)
+
+    def on_write(self, stream: int, lba: int, fp: int) -> bool:
+        self._total_writes += 1
+        self.metrics.writes += 1
+        if fp in self._seen:
+            self._dup_writes += 1
+        else:
+            self._seen.add(fp)
+        self.thresholds.record_request(-1, is_read=False)
+
+        # DIODE's defining move: P-type content bypasses the inline phase
+        if is_ptype(fp, self._ptype_fraction(stream)):
+            self._flush_run()
+            self.store.write_new_block(stream, lba, fp)  # no cache admission
+            return False
+
+        pba = self.cache.lookup(stream, fp)
+        if pba is not None:
+            self.metrics.cache_hits += 1
+            if self._run and self._run_stream == stream and lba == self._run_next_lba:
+                self._run.append((stream, lba, fp, pba))
+                self._run_next_lba = lba + 1
+            else:
+                self._flush_run()
+                self._run = [(stream, lba, fp, pba)]
+                self._run_next_lba = lba + 1
+                self._run_stream = stream
+            return True
+        self._flush_run()
+        self._write_through(stream, lba, fp)
+        self._maybe_update_threshold()
+        return False
+
+    def _maybe_update_threshold(self) -> None:
+        self._writes_since_update += 1
+        if self._writes_since_update >= 8192:
+            self.thresholds.update(-1)
+            self._writes_since_update = 0
+
+    def replay(self, trace: np.ndarray) -> "DIODE":
+        assert trace.dtype == TRACE_DTYPE
+        for rec in trace:
+            if rec["op"] == OP_WRITE:
+                self.on_write(int(rec["stream"]), int(rec["lba"]), int(rec["fp"]))
+            else:
+                self._flush_run()
+                self.thresholds.record_request(-1, is_read=True)
+                self.store.read(int(rec["stream"]), int(rec["lba"]))
+        self._flush_run()
+        return self
+
+    def finish(self) -> HybridReport:
+        self._flush_run()
+        self.post.run_to_exact()
+        self.metrics._cache_inserted = self.cache.inserted  # type: ignore[attr-defined]
+        return HybridReport(
+            inline=self.metrics,
+            post=self.post.metrics,
+            peak_disk_blocks=self.store.peak_blocks,
+            final_disk_blocks=self.store.live_blocks,
+            unique_fingerprints=self.store.unique_fingerprints(),
+            total_writes=self._total_writes,
+            total_dup_writes=self._dup_writes,
+        )

@@ -1,0 +1,154 @@
+"""HPDedup: the hybrid prioritized deduplication mechanism (paper §III).
+
+Fuses the inline phase (fingerprint cache + LDSS prioritization + spatial
+thresholds) with the post-processing phase (exact background dedup) over one
+BlockStore, and keeps the fingerprint cache coherent across post-processing
+merges.  This is the object the data pipeline and the serving KV-dedup layer
+embed; trace replay drives it directly for the paper-validation benchmarks.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, Iterable, Optional
+
+import numpy as np
+
+from .fingerprint import OP_WRITE, TRACE_DTYPE
+from .inline_engine import InlineDedupEngine, InlineMetrics
+from .postprocess import PostProcessEngine, PostProcessMetrics
+from .store import BlockStore
+
+
+@dataclass
+class HybridReport:
+    inline: InlineMetrics
+    post: PostProcessMetrics
+    peak_disk_blocks: int
+    final_disk_blocks: int
+    unique_fingerprints: int
+    total_writes: int
+    total_dup_writes: int
+
+    @property
+    def inline_dedup_ratio(self) -> float:
+        """Share of duplicate writes identified by inline caching (Fig. 6)."""
+        return self.inline.inline_dups / self.total_dup_writes if self.total_dup_writes else 0.0
+
+    @property
+    def capacity_requirement(self) -> int:
+        """Max disk blocks ever resident — the paper's Fig. 7 metric."""
+        return self.peak_disk_blocks
+
+    @property
+    def avg_hits_of_cached_fingerprints(self) -> float:
+        """Inline dedup hits per fingerprint admitted to the cache (Table IV)."""
+        inserted = getattr(self.inline, "_cache_inserted", None)
+        if inserted is None:
+            return 0.0
+        return self.inline.inline_dups / inserted if inserted else 0.0
+
+
+class HPDedup:
+    """Hybrid prioritized deduplication over a block store."""
+
+    def __init__(
+        self,
+        cache_entries: int = 32768,
+        policy: str = "lru",
+        sampling_rate: float = 0.15,
+        interval_factor: float = 0.5,
+        adaptive_threshold: bool = True,
+        fixed_threshold: int = 4,
+        prioritized: bool = True,
+        use_jax_estimator: bool = False,
+        use_unseen: bool = True,
+        postprocess_period: int = 0,
+        data_buffer_blocks: int = 4096,
+        seed: int = 0,
+    ):
+        """``postprocess_period``: if > 0, run a post-processing pass every
+        that many writes (interleaved idle-time model); 0 defers it to the
+        end of replay."""
+        self.store = BlockStore(data_buffer_blocks=data_buffer_blocks)
+        self.inline = InlineDedupEngine(
+            self.store,
+            cache_entries=cache_entries,
+            policy=policy,
+            sampling_rate=sampling_rate,
+            interval_factor=interval_factor,
+            adaptive_threshold=adaptive_threshold,
+            fixed_threshold=fixed_threshold,
+            prioritized=prioritized,
+            use_jax_estimator=use_jax_estimator,
+            use_unseen=use_unseen,
+            seed=seed,
+        )
+        self.post = PostProcessEngine(self.store)
+        self.postprocess_period = postprocess_period
+        self._writes_since_post = 0
+        self._total_writes = 0
+        self._dup_writes = 0
+        self._seen_fps: set = set()
+
+    # -- request ingestion -------------------------------------------------------
+    def write(self, stream: int, lba: int, fp: int) -> bool:
+        self._total_writes += 1
+        if fp in self._seen_fps:
+            self._dup_writes += 1  # ground truth for ratio metrics
+        else:
+            self._seen_fps.add(fp)
+        deduped = self.inline.on_write(stream, lba, fp)
+        self._writes_since_post += 1
+        if self.postprocess_period and self._writes_since_post >= self.postprocess_period:
+            self.run_postprocess()
+        return deduped
+
+    def read(self, stream: int, lba: int) -> Optional[int]:
+        return self.inline.on_read(stream, lba)
+
+    def replay(self, trace: np.ndarray) -> "HPDedup":
+        """Replay a merged trace (TRACE_DTYPE records in timestamp order)."""
+        assert trace.dtype == TRACE_DTYPE
+        for rec in trace:
+            if rec["op"] == OP_WRITE:
+                self.write(int(rec["stream"]), int(rec["lba"]), int(rec["fp"]))
+            else:
+                self.read(int(rec["stream"]), int(rec["lba"]))
+        self.inline.flush()
+        return self
+
+    # -- post-processing -----------------------------------------------------------
+    def run_postprocess(self, to_exact: bool = False) -> None:
+        self.inline.flush()
+        merged = self.post.run_to_exact() if to_exact else self.post.run()
+        # keep the fingerprint cache coherent with the merged PBAs
+        for fp, pba in merged.items():
+            holder = getattr(self.inline.cache, "owner", {}).get(fp)
+            if holder is not None:
+                self.inline.cache.streams[holder].insert(fp, pba)
+            elif hasattr(self.inline.cache, "cache") and fp in self.inline.cache.cache:
+                self.inline.cache.cache.insert(fp, pba)
+        self._writes_since_post = 0
+
+    # -- reporting --------------------------------------------------------------------
+    def finish(self, run_post_to_exact: bool = True) -> HybridReport:
+        self.inline.flush()
+        if run_post_to_exact:
+            self.run_postprocess(to_exact=True)
+        m = self.inline.metrics
+        m._cache_inserted = self.inline.cache.inserted  # type: ignore[attr-defined]
+        return HybridReport(
+            inline=m,
+            post=self.post.metrics,
+            peak_disk_blocks=self.store.peak_blocks,
+            final_disk_blocks=self.store.live_blocks,
+            unique_fingerprints=self.store.unique_fingerprints(),
+            total_writes=self._total_writes,
+            total_dup_writes=self._dup_writes,
+        )
+
+
+def replay_trace(trace: Iterable, engine: HPDedup) -> HybridReport:
+    engine.replay(np.asarray(trace, dtype=TRACE_DTYPE))
+    return engine.finish()

@@ -1,0 +1,60 @@
+"""Post-processing deduplication engine (paper §III-C).
+
+Runs in idle time: scans the on-disk fingerprint table for fingerprints
+stored at more than one PBA (duplicates the inline cache missed), collapses
+each onto its canonical PBA, remaps LBAs, decrements refcounts and lets the
+garbage collector reclaim the extra blocks.  After a full pass the store is
+*exactly* deduplicated: one PBA per unique fingerprint.
+
+Budgeting: ``run(max_merges=...)`` bounds one invocation so foreground work
+can interleave (the paper's resource-contention concern); ``run_to_exact``
+loops until no duplicate fingerprints remain.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, Optional
+
+from .store import BlockStore
+
+
+@dataclass
+class PostProcessMetrics:
+    passes: int = 0
+    merges: int = 0
+    blocks_reclaimed: int = 0
+
+
+class PostProcessEngine:
+    def __init__(self, store: BlockStore):
+        self.store = store
+        self.metrics = PostProcessMetrics()
+
+    def run(self, max_merges: Optional[int] = None) -> Dict[int, int]:
+        """One scan over the fingerprint table.
+
+        Returns {fingerprint: canonical_pba} for every merged fingerprint so
+        the caller (hybrid orchestrator) can refresh stale cache entries.
+        """
+        merged: Dict[int, int] = {}
+        dups = self.store.duplicate_fingerprints()
+        for fp in dups:
+            if max_merges is not None and self.metrics.merges >= max_merges:
+                break
+            reclaimed = self.store.merge_fingerprint(fp)
+            self.metrics.merges += 1
+            self.metrics.blocks_reclaimed += reclaimed
+            canonical = self.store.lookup_fp(fp)
+            if canonical is not None:
+                merged[fp] = canonical
+        self.metrics.passes += 1
+        return merged
+
+    def run_to_exact(self) -> Dict[int, int]:
+        merged: Dict[int, int] = {}
+        while True:
+            out = self.run()
+            merged.update(out)
+            if not self.store.duplicate_fingerprints():
+                return merged

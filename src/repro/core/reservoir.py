@@ -1,0 +1,82 @@
+"""Reservoir sampling (Vitter's Algorithm R) over per-stream fingerprint flows.
+
+The stream locality estimator samples the fingerprints of the last *n* write
+requests of each stream (the *estimation interval*) at rate ``p``; the sample
+feeds the FFH/unseen pipeline (``repro.core.ffh`` / ``repro.core.unseen``).
+
+Two implementations:
+
+* ``Reservoir`` — the classic online host-side sampler used by the inline
+  engine (one per stream; O(1) per element, O(k) memory).
+* ``reservoir_indices`` — a vectorized offline sampler used by benchmarks and
+  the JAX estimation path: given interval length ``n`` and reservoir size
+  ``k``, returns the sampled positions with the exact Algorithm-R
+  distribution (every element equally likely to be retained).
+"""
+
+from __future__ import annotations
+
+from typing import List, Optional
+
+import numpy as np
+
+
+class Reservoir:
+    """Online uniform sample of size ``k`` from an unbounded stream."""
+
+    def __init__(self, k: int, seed: int = 0):
+        if k <= 0:
+            raise ValueError(f"reservoir size must be positive, got {k}")
+        self.k = k
+        self.rng = np.random.default_rng(seed)
+        self.buf: List[int] = []
+        self.seen = 0
+
+    def offer(self, item: int) -> None:
+        self.seen += 1
+        if len(self.buf) < self.k:
+            self.buf.append(item)
+        else:
+            j = int(self.rng.integers(0, self.seen))
+            if j < self.k:
+                self.buf[j] = item
+
+    def sample(self) -> np.ndarray:
+        return np.asarray(self.buf, dtype=np.uint64)
+
+    def reset(self) -> None:
+        self.buf.clear()
+        self.seen = 0
+
+    def __len__(self) -> int:
+        return len(self.buf)
+
+    # --- checkpointable state (the data pipeline snapshots estimator state
+    # so restart resumes with identical sampling decisions) ---
+    def state_dict(self) -> dict:
+        return {
+            "k": self.k,
+            "buf": list(self.buf),
+            "seen": self.seen,
+            "rng": self.rng.bit_generator.state,
+        }
+
+    @classmethod
+    def from_state(cls, state: dict) -> "Reservoir":
+        r = cls(state["k"])
+        r.buf = list(state["buf"])
+        r.seen = state["seen"]
+        r.rng.bit_generator.state = state["rng"]
+        return r
+
+
+def reservoir_indices(n: int, k: int, rng: Optional[np.random.Generator] = None) -> np.ndarray:
+    """Positions retained by Algorithm R after seeing ``n`` elements.
+
+    Equivalent in distribution to a uniform k-subset of ``range(n)`` when
+    ``n >= k`` (returns all positions otherwise).
+    """
+    rng = rng or np.random.default_rng(0)
+    if n <= k:
+        return np.arange(n)
+    return rng.choice(n, size=k, replace=False)

@@ -1,0 +1,104 @@
+"""Weighted random victim-stream selection (paper §IV-B).
+
+Evict priorities ``p_i = 1 / LDSS_i`` are mapped to adjacent non-overlapping
+segments ``[sum_{k<i} p_k, sum_{k<=i} p_k)``; eviction draws ``r`` uniform in
+``[0, sum p)`` and picks the stream whose segment contains ``r``.  A Fenwick
+(binary indexed) tree gives O(log M) weight updates and prefix-search draws.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+import numpy as np
+
+
+class FenwickSegments:
+    """Fenwick tree over per-stream weights with prefix-search sampling."""
+
+    def __init__(self, capacity: int = 64):
+        self._size = 1
+        while self._size < capacity:
+            self._size <<= 1
+        self._tree = np.zeros(self._size + 1, dtype=np.float64)
+        self._weights: Dict[int, float] = {}
+        self._slot_of: Dict[int, int] = {}
+        self._stream_of: Dict[int, int] = {}
+        self._free = list(range(self._size - 1, -1, -1))
+
+    # -- slot management ----------------------------------------------------
+    def _grow(self) -> None:
+        old_size = self._size
+        self._size <<= 1
+        tree = np.zeros(self._size + 1, dtype=np.float64)
+        self._tree = tree
+        self._free.extend(range(self._size - 1, old_size - 1, -1))
+        for stream, slot in self._slot_of.items():
+            self._add(slot, self._weights[stream])
+
+    def _add(self, slot: int, delta: float) -> None:
+        i = slot + 1
+        while i <= self._size:
+            self._tree[i] += delta
+            i += i & (-i)
+
+    # -- public API ----------------------------------------------------------
+    def set_weight(self, stream: int, weight: float) -> None:
+        """Set stream's segment length (0 removes it from the draw)."""
+        weight = max(float(weight), 0.0)
+        if stream not in self._slot_of:
+            if weight == 0.0:
+                return
+            if not self._free:
+                self._grow()
+            slot = self._free.pop()
+            self._slot_of[stream] = slot
+            self._stream_of[slot] = stream
+            self._weights[stream] = 0.0
+        slot = self._slot_of[stream]
+        self._add(slot, weight - self._weights[stream])
+        self._weights[stream] = weight
+        if weight == 0.0:
+            del self._weights[stream]
+            del self._stream_of[slot]
+            del self._slot_of[stream]
+            self._free.append(slot)
+
+    def weight(self, stream: int) -> float:
+        return self._weights.get(stream, 0.0)
+
+    def draw(self, rng: np.random.Generator) -> Optional[int]:
+        """Sample a stream with probability proportional to its weight."""
+        tot = self._prefix(self._size)
+        if tot <= 0.0:
+            return None
+        r = rng.uniform(0.0, tot)
+        # Fenwick prefix search: find the smallest slot with prefix sum > r
+        pos = 0
+        mask = self._size
+        while mask:
+            nxt = pos + mask
+            if nxt <= self._size and self._tree[nxt] <= r:
+                r -= self._tree[nxt]
+                pos = nxt
+            mask >>= 1
+        slot = pos  # pos is the count of slots fully below r
+        stream = self._stream_of.get(slot)
+        if stream is None:
+            # numeric edge (r == tot): fall back to the max-weight stream
+            stream = max(self._weights, key=self._weights.get)
+        return stream
+
+    def _prefix(self, count: int) -> float:
+        s = 0.0
+        i = count
+        while i > 0:
+            s += self._tree[i]
+            i -= i & (-i)
+        return float(s)
+
+    def total_weight(self) -> float:
+        return self._prefix(self._size)
+
+    def streams(self):
+        return list(self._weights.keys())

@@ -1,0 +1,180 @@
+"""Block store: the persistent layer under both dedup phases (paper §III-B/C).
+
+Models the primary storage stack HPDedup manages:
+
+* **LBA mapping table** — (stream, LBA) -> PBA (NVRAM in the paper).
+* **On-disk fingerprint table** — fingerprint -> list of PBAs holding that
+  content (the post-processing phase scans it; >1 PBA per fingerprint means
+  inline missed a duplicate).
+* **Reference counts** — per-PBA; the garbage collector frees PBAs at 0.
+* **D-LRU data buffer** — SSD staging buffer for recently accessed blocks.
+
+Metrics exposed: live blocks, *peak* blocks (the paper's disk-capacity
+requirement figure, Fig. 7), writes issued to disk.
+"""
+
+from __future__ import annotations
+
+from collections import OrderedDict
+from typing import Dict, List, Optional, Tuple
+
+
+class DLRUBuffer:
+    """D-LRU staging buffer (CacheDedup's D-LRU, used for the SSD data buffer):
+    an LRU over *deduplicated* blocks — keyed by PBA so duplicate content
+    occupies one slot regardless of how many LBAs reference it."""
+
+    def __init__(self, capacity_blocks: int):
+        self.capacity = capacity_blocks
+        self._lru: "OrderedDict[int, None]" = OrderedDict()
+        self.hits = 0
+        self.misses = 0
+
+    def access(self, pba: int) -> bool:
+        hit = pba in self._lru
+        if hit:
+            self._lru.move_to_end(pba)
+            self.hits += 1
+        else:
+            self.misses += 1
+            self._lru[pba] = None
+            while len(self._lru) > self.capacity:
+                self._lru.popitem(last=False)
+        return hit
+
+    def invalidate(self, pba: int) -> None:
+        self._lru.pop(pba, None)
+
+
+class BlockStore:
+    """Content store with LBA mapping, fingerprint table and refcounts."""
+
+    def __init__(self, data_buffer_blocks: int = 4096):
+        self.lba_map: Dict[Tuple[int, int], int] = {}
+        self.lbas_of_pba: Dict[int, set] = {}  # reverse index for remapping
+        self.fp_table: Dict[int, List[int]] = {}
+        self.refcount: Dict[int, int] = {}
+        self.fp_of_pba: Dict[int, int] = {}
+        self.buffer = DLRUBuffer(data_buffer_blocks)
+        self._next_pba = 0
+        self.live_blocks = 0
+        self.peak_blocks = 0
+        self.disk_writes = 0
+
+    # -- write path ------------------------------------------------------------
+    def write_new_block(self, stream: int, lba: int, fp: int) -> int:
+        """Write content to a fresh PBA (inline phase found no duplicate)."""
+        pba = self._next_pba
+        self._next_pba += 1
+        self.fp_table.setdefault(fp, []).append(pba)
+        self.fp_of_pba[pba] = fp
+        self.refcount[pba] = 0
+        self._map(stream, lba, pba)
+        self.live_blocks += 1
+        self.peak_blocks = max(self.peak_blocks, self.live_blocks)
+        self.disk_writes += 1
+        self.buffer.access(pba)
+        return pba
+
+    def map_duplicate(self, stream: int, lba: int, pba: int) -> None:
+        """Point an LBA at an existing PBA (inline dedup hit)."""
+        self._map(stream, lba, pba)
+        self.buffer.access(pba)
+
+    def _map(self, stream: int, lba: int, pba: int) -> None:
+        key = (stream, lba)
+        old = self.lba_map.get(key)
+        if old == pba:
+            return
+        if old is not None:
+            self.lbas_of_pba.get(old, set()).discard(key)
+            self._unref(old)
+        self.lba_map[key] = pba
+        self.lbas_of_pba.setdefault(pba, set()).add(key)
+        self.refcount[pba] = self.refcount.get(pba, 0) + 1
+
+    def _unref(self, pba: int) -> None:
+        rc = self.refcount.get(pba, 0) - 1
+        self.refcount[pba] = rc
+        if rc <= 0:
+            self._free(pba)
+
+    def _free(self, pba: int) -> None:
+        fp = self.fp_of_pba.pop(pba, None)
+        if fp is not None:
+            lst = self.fp_table.get(fp)
+            if lst:
+                try:
+                    lst.remove(pba)
+                except ValueError:
+                    pass
+                if not lst:
+                    del self.fp_table[fp]
+        self.refcount.pop(pba, None)
+        self.lbas_of_pba.pop(pba, None)
+        self.buffer.invalidate(pba)
+        self.live_blocks -= 1
+
+    # -- read path ---------------------------------------------------------------
+    def read(self, stream: int, lba: int) -> Optional[int]:
+        pba = self.lba_map.get((stream, lba))
+        if pba is not None:
+            self.buffer.access(pba)
+        return pba
+
+    # -- post-processing support ---------------------------------------------------
+    def duplicate_fingerprints(self) -> List[int]:
+        """Fingerprints stored at more than one PBA (inline misses)."""
+        return [fp for fp, pbas in self.fp_table.items() if len(pbas) > 1]
+
+    def merge_fingerprint(self, fp: int) -> int:
+        """Collapse all PBAs of ``fp`` onto the canonical (first) PBA.
+
+        Returns the number of disk blocks reclaimed.
+        """
+        pbas = self.fp_table.get(fp, [])
+        if len(pbas) <= 1:
+            return 0
+        canonical, extras = pbas[0], list(pbas[1:])
+        canon_keys = self.lbas_of_pba.setdefault(canonical, set())
+        reclaimed = 0
+        for p in extras:
+            for key in list(self.lbas_of_pba.get(p, ())):
+                self.lba_map[key] = canonical
+                canon_keys.add(key)
+                self.refcount[canonical] = self.refcount.get(canonical, 0) + 1
+                self.refcount[p] -= 1
+            self.lbas_of_pba[p] = set()
+            if self.refcount.get(p, 0) <= 0:
+                self._free(p)
+                reclaimed += 1
+        return reclaimed
+
+    # -- invariants (used by property tests) --------------------------------------
+    def lookup_fp(self, fp: int) -> Optional[int]:
+        pbas = self.fp_table.get(fp)
+        return pbas[0] if pbas else None
+
+    def unique_fingerprints(self) -> int:
+        return len(self.fp_table)
+
+    def check_consistency(self) -> None:
+        """Raise AssertionError if internal tables disagree."""
+        live = set()
+        for fp, pbas in self.fp_table.items():
+            assert len(pbas) == len(set(pbas)), f"dup PBAs for fp {fp}"
+            for p in pbas:
+                assert self.fp_of_pba.get(p) == fp
+                live.add(p)
+        assert len(live) == self.live_blocks, (len(live), self.live_blocks)
+        refs: Dict[int, int] = {}
+        for key, pba in self.lba_map.items():
+            assert pba in live, f"LBA maps to freed PBA {pba}"
+            assert key in self.lbas_of_pba.get(pba, ()), f"reverse index missing {key}"
+            refs[pba] = refs.get(pba, 0) + 1
+        for p in live:
+            assert self.refcount.get(p, 0) == refs.get(p, 0), (
+                p,
+                self.refcount.get(p),
+                refs.get(p),
+            )

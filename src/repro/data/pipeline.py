@@ -1,0 +1,215 @@
+"""Multi-tenant training-data ingest pipeline with HPDedup inline dedup.
+
+The training-cluster analogue of the paper's primary-storage write path
+(DESIGN.md §2): token streams from multiple tenants (the paper's VMs) are
+framed into fixed-size token blocks, fingerprinted (Pallas kernel on device,
+batched), and passed through the hybrid dedup engine.  Blocks that survive
+dedup are admitted to the sample store and assembled into global batches;
+the post-processing phase runs between epochs/steps (idle time) and removes
+inline misses before blocks are re-served.
+
+Everything is checkpointable: tenant cursors, reservoir/estimator state and
+the fingerprint cache survive restarts, so restarted runs neither re-train
+on deduped blocks nor double-admit (exactly-once sample accounting).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Iterator, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core import HPDedup
+from repro.kernels.ops import fingerprint_ints
+
+
+@dataclasses.dataclass
+class TenantSpec:
+    """A synthetic tenant stream: token blocks with controllable duplication.
+
+    ``dup_ratio``: probability a generated block repeats earlier content of
+    this tenant; ``overlap_group``: tenants sharing a group also share a
+    content pool (cross-tenant duplicates, the paper's 0-40% user overlap);
+    ``locality``: "good" duplicates recent blocks, "weak" duplicates uniform
+    history.
+    """
+
+    tenant_id: int
+    rate: float = 1.0
+    dup_ratio: float = 0.3
+    locality: str = "good"
+    overlap_group: Optional[str] = None
+    overlap_prob: float = 0.2
+
+
+class TenantStream:
+    def __init__(self, spec: TenantSpec, block_tokens: int, vocab: int, seed: int,
+                 shared_pools: Dict[str, List[np.ndarray]], token_probs: Optional[np.ndarray] = None):
+        self.spec = spec
+        self.block_tokens = block_tokens
+        self.vocab = vocab
+        self.rng = np.random.default_rng(seed)
+        self.history: List[np.ndarray] = []
+        self.shared_pools = shared_pools
+        self.token_probs = token_probs  # skewed unigram dist -> learnable data
+        self.emitted = 0
+
+    def next_block(self) -> np.ndarray:
+        s = self.spec
+        pool = self.shared_pools.setdefault(s.overlap_group, []) if s.overlap_group else None
+        if self.history and self.rng.random() < s.dup_ratio:
+            if s.locality == "good":
+                back = min(len(self.history), 1 + int(self.rng.geometric(1.0 / 32)))
+            else:
+                back = int(self.rng.integers(1, len(self.history) + 1))
+            block = self.history[-back]
+        elif pool is not None and pool and self.rng.random() < s.overlap_prob:
+            block = pool[int(self.rng.integers(0, len(pool)))]
+        else:
+            if self.token_probs is not None:
+                block = self.rng.choice(self.vocab, size=self.block_tokens, p=self.token_probs).astype(np.int32)
+            else:
+                block = self.rng.integers(0, self.vocab, size=self.block_tokens, dtype=np.int32)
+            if pool is not None and len(pool) < 4096:
+                pool.append(block)
+        self.history.append(block)
+        if len(self.history) > 65536:
+            self.history.pop(0)
+        self.emitted += 1
+        return block
+
+    def state_dict(self) -> dict:
+        # full history: restores must regenerate the *exact* content stream
+        # (exactly-once sample accounting).  The deque is bounded at 65536
+        # blocks; production would store content-addressed references.
+        return {"emitted": self.emitted, "rng": self.rng.bit_generator.state,
+                "history": [h.tolist() for h in self.history]}
+
+    def load_state(self, st: dict) -> None:
+        self.emitted = st["emitted"]
+        self.rng.bit_generator.state = st["rng"]
+        self.history = [np.asarray(h, dtype=np.int32) for h in st["history"]]
+
+
+@dataclasses.dataclass
+class PipelineMetrics:
+    blocks_in: int = 0
+    blocks_deduped_inline: int = 0
+    blocks_admitted: int = 0
+    post_removed: int = 0
+
+    @property
+    def dedup_saving(self) -> float:
+        return self.blocks_deduped_inline / self.blocks_in if self.blocks_in else 0.0
+
+
+class DedupIngestPipeline:
+    """Ingest -> fingerprint (device, batched) -> HPDedup -> batch assembly."""
+
+    def __init__(
+        self,
+        tenants: Sequence[TenantSpec],
+        block_tokens: int = 256,
+        vocab: int = 32000,
+        cache_entries: int = 8192,
+        fingerprint_batch: int = 64,
+        postprocess_every_blocks: int = 4096,
+        token_skew: float = 1.2,
+        seed: int = 0,
+    ):
+        self.block_tokens = block_tokens
+        self.vocab = vocab
+        self.fingerprint_batch = fingerprint_batch
+        self._pools: Dict[str, List[np.ndarray]] = {}
+        if token_skew > 0:
+            probs = 1.0 / np.arange(1, vocab + 1) ** token_skew
+            probs /= probs.sum()
+        else:
+            probs = None
+        self.streams = {
+            t.tenant_id: TenantStream(t, block_tokens, vocab, seed + 101 * t.tenant_id, self._pools, probs)
+            for t in tenants
+        }
+        self.rates = np.array([t.rate for t in tenants], dtype=np.float64)
+        self.rates /= self.rates.sum()
+        self.tenant_ids = [t.tenant_id for t in tenants]
+        self.engine = HPDedup(
+            cache_entries=cache_entries,
+            policy="lru",
+            use_jax_estimator=True,
+            postprocess_period=postprocess_every_blocks,
+            seed=seed,
+        )
+        self.rng = np.random.default_rng(seed + 7)
+        self.metrics = PipelineMetrics()
+        # block store: fingerprint -> token block (the "disk")
+        self.block_content: Dict[int, np.ndarray] = {}
+        self._lba: Dict[int, int] = {}  # per-tenant next logical block address
+        self._fifo = np.zeros(0, dtype=np.int32)  # admitted tokens awaiting batching
+
+    # -- ingest ----------------------------------------------------------------
+    def _ingest_chunk(self) -> List[Tuple[int, np.ndarray, int]]:
+        """Pull a batch of blocks, fingerprint them on-device in one call."""
+        picks = self.rng.choice(len(self.tenant_ids), size=self.fingerprint_batch, p=self.rates)
+        blocks, tenants = [], []
+        for p in picks:
+            tid = self.tenant_ids[int(p)]
+            blocks.append(self.streams[tid].next_block())
+            tenants.append(tid)
+        fps = fingerprint_ints(np.stack(blocks))  # Pallas kernel (interpret on CPU)
+        return [(tenants[i], blocks[i], int(fps[i])) for i in range(len(blocks))]
+
+    def _refill(self) -> None:
+        """Ingest one fingerprint batch; admitted tokens join the flat FIFO."""
+        for tid, block, fp in self._ingest_chunk():
+            self.metrics.blocks_in += 1
+            lba = self._lba.get(tid, 0)
+            self._lba[tid] = lba + 1
+            deduped = self.engine.write(tid, lba, fp)
+            if deduped:
+                self.metrics.blocks_deduped_inline += 1
+                continue
+            if fp not in self.block_content:
+                self.block_content[fp] = block
+            self.metrics.blocks_admitted += 1
+            self._fifo = np.concatenate([self._fifo, block])
+
+    def next_batch(self, batch_size: int, seq_len: int) -> Dict[str, np.ndarray]:
+        need = batch_size * (seq_len + 1)
+        while self._fifo.size < need:
+            self._refill()
+        arr = self._fifo[:need].reshape(batch_size, seq_len + 1)
+        self._fifo = self._fifo[need:]
+        return {
+            "inputs": arr[:, :-1].astype(np.int32),
+            "targets": arr[:, 1:].astype(np.int32),
+            "mask": np.ones((batch_size, seq_len), dtype=np.float32),
+        }
+
+    def batches(self, batch_size: int, seq_len: int) -> Iterator[Dict[str, np.ndarray]]:
+        """Global batches of (inputs, targets, mask) from deduped blocks."""
+        while True:
+            yield self.next_batch(batch_size, seq_len)
+
+    # -- checkpointable state ------------------------------------------------------
+    def state_dict(self) -> dict:
+        est = self.engine.inline.estimator
+        return {
+            "fifo": self._fifo.tolist(),
+            "lba": dict(self._lba),
+            "rng": self.rng.bit_generator.state,
+            "streams": {tid: s.state_dict() for tid, s in self.streams.items()},
+            "estimator": est.state_dict() if est else None,
+            "metrics": dataclasses.asdict(self.metrics),
+        }
+
+    def load_state(self, st: dict) -> None:
+        self._fifo = np.asarray(st["fifo"], dtype=np.int32)
+        self._lba = {int(k): v for k, v in st["lba"].items()}
+        self.rng.bit_generator.state = st["rng"]
+        for tid, s in st["streams"].items():
+            self.streams[int(tid)].load_state(s)
+        if st["estimator"] and self.engine.inline.estimator:
+            self.engine.inline.estimator.load_state(st["estimator"])
+        self.metrics = PipelineMetrics(**st["metrics"])

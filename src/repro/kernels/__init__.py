@@ -1,0 +1,17 @@
+"""Pallas TPU kernels for HPDedup's compute hot-spots.
+
+* ``fingerprint``  — lane-parallel 128-bit block hashing (the paper's MD5
+  fingerprinting loop, rethought for the VPU; DESIGN.md §2).
+* ``histogram``    — fingerprint-frequency histogram (FFH) reduction.
+* ``paged_attention`` — decode attention over the dedup-paged KV cache
+  (the serving-side hot-spot that HPDedup's page indirection creates).
+
+``ops`` holds the jitted public wrappers (padding, dtypes, interpret-mode
+dispatch); ``ref`` holds pure-jnp oracles plus an independent numpy golden
+model for the hash.
+"""
+
+from .ops import ffh_counts, fingerprint_blocks, fingerprint_ints
+from .paged_attention import paged_attention
+
+__all__ = ["ffh_counts", "fingerprint_blocks", "fingerprint_ints", "paged_attention"]

@@ -1,0 +1,66 @@
+"""Pallas TPU kernel: fingerprint-frequency histogram (FFH).
+
+Computes ``ffh[j-1] = #{i : counts[i] == j}`` for ``j = 1..NBINS`` (counts
+above NBINS accumulate into the last bin, matching ``repro.core.ffh``): the
+statistic the unseen estimator consumes every estimation interval.
+
+TPU mapping: the scatter-add a CPU would use is hostile to the VPU; instead
+each grid step loads a ``(TILE, LANES)`` tile of counts, one-hot-compares it
+against the bin ids — a ``(TILE, LANES, NBINS)``-shaped broadcast compare
+evaluated as NBINS lane-parallel equality sweeps — and accumulates partial
+histograms into a VMEM accumulator.  The output block index map pins every
+grid step to the same (1, NBINS) block, the canonical Pallas reduction
+pattern (initialize on first step, add thereafter).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+TILE = 8          # sublane rows per grid step
+LANES = 128       # lane width
+NBINS_DEFAULT = 40  # matches repro.core.unseen.RARE_BINS
+
+
+def _histogram_kernel(c_ref, o_ref, *, nbins: int):
+    step = pl.program_id(0)
+
+    @pl.when(step == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    counts = c_ref[...]  # (TILE, LANES) int32
+    clipped = jnp.minimum(counts, nbins)
+    # one-hot compare against bins 1..nbins; sum over the tile
+    bins = jnp.arange(1, nbins + 1, dtype=jnp.int32)
+    onehot = (clipped[:, :, None] == bins[None, None, :]).astype(jnp.int32)
+    o_ref[...] += jnp.sum(onehot, axis=(0, 1))[None, :]
+
+
+def ffh_pallas(counts: jnp.ndarray, nbins: int = NBINS_DEFAULT, *, interpret: bool = False) -> jnp.ndarray:
+    """FFH of occurrence counts.
+
+    Args:
+      counts: (N,) int32 occurrence counts; zeros are ignored (padding).
+      nbins: histogram length; counts > nbins land in the last bin.
+    Returns:
+      (nbins,) int32 FFH.
+    """
+    n = counts.shape[0]
+    per_step = TILE * LANES
+    if n % per_step:
+        raise ValueError(f"N={n} must be a multiple of {per_step} (ops.py pads)")
+    grid = (n // per_step,)
+    out = pl.pallas_call(
+        functools.partial(_histogram_kernel, nbins=nbins),
+        out_shape=jax.ShapeDtypeStruct((1, nbins), jnp.int32),
+        grid=grid,
+        in_specs=[pl.BlockSpec((TILE, LANES), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((1, nbins), lambda i: (0, 0)),
+        interpret=interpret,
+    )(counts.reshape(-1, LANES))
+    return out[0]

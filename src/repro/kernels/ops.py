@@ -1,0 +1,90 @@
+"""Jitted public wrappers for the Pallas kernels.
+
+Handles backend dispatch (interpret mode off-TPU), padding to tile
+boundaries, dtype viewing, and the conversion between kernel outputs and the
+host-side fingerprint ints the dedup engines consume.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .fingerprint import LANES, NUM_HASHES, TILE_B, fingerprint_pallas
+from .histogram import NBINS_DEFAULT, TILE, ffh_pallas
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _pad_axis(x: jnp.ndarray, axis: int, multiple: int, value=0) -> jnp.ndarray:
+    size = x.shape[axis]
+    pad = (-size) % multiple
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths, constant_values=value)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def _fingerprint_jit(blocks: jnp.ndarray, interpret: bool) -> jnp.ndarray:
+    return fingerprint_pallas(blocks, interpret=interpret)
+
+
+def fingerprint_blocks(blocks, interpret: bool | None = None) -> jnp.ndarray:
+    """Fingerprint content blocks.
+
+    Args:
+      blocks: (B, W) array of 32-bit words (any 32-bit dtype; bytes should be
+        packed little-endian by the caller), or (B, W8) uint8 which is viewed
+        as words after padding to 4 bytes.
+    Returns:
+      (B, NUM_HASHES) uint32 fingerprints.
+    """
+    blocks = jnp.asarray(blocks)
+    if blocks.dtype == jnp.uint8:
+        blocks = _pad_axis(blocks, 1, 4)
+        blocks = jax.lax.bitcast_convert_type(
+            blocks.reshape(blocks.shape[0], -1, 4), jnp.uint32
+        ).reshape(blocks.shape[0], -1)
+    elif blocks.dtype in (jnp.int32, jnp.float32):
+        blocks = jax.lax.bitcast_convert_type(blocks, jnp.uint32)
+    elif blocks.dtype != jnp.uint32:
+        raise TypeError(f"unsupported dtype {blocks.dtype}")
+    b = blocks.shape[0]
+    blocks = _pad_axis(blocks, 1, LANES)
+    blocks = _pad_axis(blocks, 0, TILE_B)
+    interpret = (not _on_tpu()) if interpret is None else interpret
+    return _fingerprint_jit(blocks, interpret)[:b]
+
+
+def fingerprint_ints(blocks, interpret: bool | None = None) -> np.ndarray:
+    """(B,) uint64 fingerprints for the host-side dedup engines.
+
+    Folds the 128-bit kernel output to 64 bits (two words verbatim, two mixed
+    in) — collision probability ~2^-64 per pair.
+    """
+    fp = np.asarray(fingerprint_blocks(blocks, interpret=interpret), dtype=np.uint64)
+    lo = fp[:, 0] ^ (fp[:, 2] * np.uint64(0x9E3779B97F4A7C15) & np.uint64(0xFFFFFFFFFFFFFFFF))
+    hi = fp[:, 1] ^ fp[:, 3]
+    out = (hi << np.uint64(32)) | (lo & np.uint64(0xFFFFFFFF))
+    out[out == 0] = 1  # 0 is reserved
+    return out
+
+
+@functools.partial(jax.jit, static_argnames=("nbins", "interpret"))
+def _ffh_jit(counts: jnp.ndarray, nbins: int, interpret: bool) -> jnp.ndarray:
+    return ffh_pallas(counts, nbins, interpret=interpret)
+
+
+def ffh_counts(counts, nbins: int = NBINS_DEFAULT, interpret: bool | None = None) -> jnp.ndarray:
+    """FFH of occurrence counts (zeros = padding, ignored)."""
+    counts = jnp.asarray(counts, dtype=jnp.int32).reshape(-1)
+    counts = _pad_axis(counts, 0, TILE * LANES)
+    interpret = (not _on_tpu()) if interpret is None else interpret
+    return _ffh_jit(counts, nbins, interpret)

@@ -1,0 +1,124 @@
+"""Pallas TPU kernel: decode attention over HPDedup'd paged KV cache.
+
+The serving-side integration (repro.serving.dedup_kv) stores KV as pages
+addressed by a block table; deduplicated prefixes make different sequences'
+table entries point at the *same* physical page.  A dense-cache attention
+would first gather pages into a contiguous cache (materializing the
+duplicates HPDedup just removed); this kernel instead walks the block table
+directly: the page id is a *scalar-prefetch* operand, so Pallas issues the
+HBM->VMEM DMA for exactly the page each grid step needs — physical pages
+stay shared, and VMEM holds one (page_size, KVH, D) tile at a time.
+
+Grid: (batch, pages_per_seq), sequential over pages per row with an
+online-softmax accumulator in VMEM scratch (flash-style), GQA via head
+groups.  Validated in interpret mode against a gather-then-dense reference
+over shape/dtype sweeps including tables with shared (deduped) pages.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _paged_attn_kernel(
+    table_ref,            # scalar-prefetch: (B, pages_per_seq) int32
+    lengths_ref,          # scalar-prefetch: (B,) int32
+    q_ref,                # (1, H, D)
+    k_ref,                # (1, page_size, KVH, D)   page selected via table
+    v_ref,
+    o_ref,                # (1, H, D)
+    m_ref,                # scratch (H,)
+    l_ref,                # scratch (H,)
+    acc_ref,              # scratch (H, D)
+    *,
+    page_size: int,
+    pages_per_seq: int,
+    scale: float,
+):
+    b = pl.program_id(0)
+    i = pl.program_id(1)
+
+    @pl.when(i == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, -jnp.inf)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0].astype(jnp.float32) * scale          # (H, D)
+    k = k_ref[0].astype(jnp.float32)                  # (page, KVH, D)
+    v = v_ref[0].astype(jnp.float32)
+    h, d = q.shape
+    page, kvh, _ = k.shape
+    groups = h // kvh
+
+    qg = q.reshape(kvh, groups, d)
+    kg = k.transpose(1, 0, 2)                          # (KVH, page, D)
+    logits = jnp.einsum("kgd,kpd->kgp", qg, kg).reshape(h, page)
+
+    # mask past the sequence length (partial last page)
+    pos = i * page_size + jax.lax.broadcasted_iota(jnp.int32, (1, page), 1)
+    valid = pos < lengths_ref[b]
+    logits = jnp.where(valid, logits, NEG_INF)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(logits, axis=-1))
+    p = jnp.exp(logits - m_new[:, None])
+    corr = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=-1)
+    vg = v.transpose(1, 0, 2)                          # (KVH, page, D)
+    pv = jnp.einsum("kgp,kpd->kgd", p.reshape(kvh, groups, page), vg)
+    acc_ref[...] = acc_ref[...] * corr[:, None] + pv.reshape(h, d)
+    m_ref[...] = m_new
+
+    @pl.when(i == pages_per_seq - 1)
+    def _finish():
+        o_ref[0] = (acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)[:, None]).astype(o_ref.dtype)
+
+
+def paged_attention(
+    q: jnp.ndarray,             # (B, H, D)
+    k_pages: jnp.ndarray,       # (num_pages, page_size, KVH, D)
+    v_pages: jnp.ndarray,
+    block_table: jnp.ndarray,   # (B, pages_per_seq) int32 physical page ids
+    lengths: jnp.ndarray,       # (B,) int32 valid tokens per sequence
+    *,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    b, h, d = q.shape
+    num_pages, page_size, kvh, _ = k_pages.shape
+    pages_per_seq = block_table.shape[1]
+    if h % kvh:
+        raise ValueError(f"H={h} must be a multiple of KVH={kvh}")
+
+    from jax.experimental.pallas import tpu as pltpu
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(b, pages_per_seq),
+        in_specs=[
+            pl.BlockSpec((1, h, d), lambda bi, i, table, lens: (bi, 0, 0)),
+            pl.BlockSpec((1, page_size, kvh, d), lambda bi, i, table, lens: (table[bi, i], 0, 0, 0)),
+            pl.BlockSpec((1, page_size, kvh, d), lambda bi, i, table, lens: (table[bi, i], 0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, h, d), lambda bi, i, table, lens: (bi, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((h,), jnp.float32),
+            pltpu.VMEM((h,), jnp.float32),
+            pltpu.VMEM((h, d), jnp.float32),
+        ],
+    )
+    kernel = functools.partial(
+        _paged_attn_kernel, page_size=page_size, pages_per_seq=pages_per_seq, scale=d ** -0.5
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, h, d), q.dtype),
+        interpret=interpret,
+    )(block_table, lengths, q, k_pages, v_pages)

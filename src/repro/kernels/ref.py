@@ -1,0 +1,97 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+Written as straight-line jnp over the whole array (no tiling, no grids) so a
+kernel bug in BlockSpec indexing or accumulation cannot be masked by shared
+code.  The *hash math* is shared by construction (the kernel defines the
+hash), so the fingerprint oracle re-implements the same rounds independently
+and tests additionally pin golden values computed with Python big-int
+arithmetic (tests/test_kernels_fingerprint.py).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .fingerprint import LANES, NUM_HASHES, PRIME1, PRIME2, PRIME3, PRIME4, PRIME5, SEEDS
+
+
+def _rotl_ref(v, r):
+    return (v << jnp.uint32(r)) | jax.lax.shift_right_logical(v, jnp.uint32(32 - r))
+
+
+def fingerprint_ref(blocks: jnp.ndarray) -> jnp.ndarray:
+    """Oracle for fingerprint_pallas: (B, W) uint32 -> (B, NUM_HASHES) uint32."""
+    b, w = blocks.shape
+    assert w % LANES == 0
+    chunks = w // LANES
+    x3 = blocks.reshape(b, chunks, LANES).astype(jnp.uint32)
+    lane = jnp.arange(LANES, dtype=jnp.uint32)
+    P1, P2, P3, P4, P5 = (jnp.uint32(p) for p in (PRIME1, PRIME2, PRIME3, PRIME4, PRIME5))
+
+    outs = []
+    for which in range(NUM_HASHES):
+        keys = (lane * jnp.uint32(0x9E3779B9) + jnp.uint32(0xA5A5A5A5 + 0x01000193 * which)) | jnp.uint32(1)
+        lane_mult = (lane * P4 + jnp.uint32(SEEDS[which])) | jnp.uint32(1)
+
+        # all-chunk whitening in one shot (the kernel loops; the oracle doesn't)
+        t = (x3 ^ keys[None, None, :]) * P1
+        t = t ^ jax.lax.shift_right_logical(t, jnp.uint32(15))
+        t = t * P2
+        s = jnp.sum(t * lane_mult[None, None, :], axis=2, dtype=jnp.uint32)  # (B, chunks)
+
+        h = jnp.full((b,), SEEDS[which], dtype=jnp.uint32)
+        for c in range(chunks):
+            h = _rotl_ref(h + s[:, c] * P3, 13) * P1
+            h = h ^ (jnp.uint32(c + 1) * P5)
+        h = h ^ jnp.uint32(w)
+        h = h ^ jax.lax.shift_right_logical(h, jnp.uint32(15))
+        h = h * P2
+        h = h ^ jax.lax.shift_right_logical(h, jnp.uint32(13))
+        h = h * P3
+        h = h ^ jax.lax.shift_right_logical(h, jnp.uint32(16))
+        outs.append(h)
+    return jnp.stack(outs, axis=1)
+
+
+def fingerprint_golden_numpy(blocks: np.ndarray) -> np.ndarray:
+    """Independent golden model with Python/numpy uint64 arithmetic mod 2^32."""
+    M = np.uint64(0xFFFFFFFF)
+    b, w = blocks.shape
+    chunks = w // LANES
+    lane = np.arange(LANES, dtype=np.uint64)
+    out = np.zeros((b, NUM_HASHES), dtype=np.uint64)
+    P1, P2, P3, P4, P5 = (np.uint64(int(p)) for p in (PRIME1, PRIME2, PRIME3, PRIME4, PRIME5))
+    for which in range(NUM_HASHES):
+        seed = np.uint64(int(SEEDS[which]))
+        keys = ((lane * np.uint64(0x9E3779B9) + np.uint64(0xA5A5A5A5 + 0x01000193 * which)) & M) | np.uint64(1)
+        lane_mult = (((lane * P4) & M) + seed & M) | np.uint64(1)
+        x = blocks.astype(np.uint64).reshape(b, chunks, LANES)
+        t = ((x ^ keys[None, None, :]) * P1) & M
+        t = t ^ (t >> np.uint64(15))
+        t = (t * P2) & M
+        s = np.zeros((b, chunks), dtype=np.uint64)
+        for c in range(chunks):
+            s[:, c] = np.sum((t[:, c, :] * lane_mult[None, :]) & M, axis=1) & M
+        h = np.full((b,), seed, dtype=np.uint64)
+        for c in range(chunks):
+            v = (h + (s[:, c] * P3) & M) & M
+            h = (((v << np.uint64(13)) | (v >> np.uint64(19))) & M) * P1 & M
+            h = h ^ ((np.uint64(c + 1) * P5) & M)
+        h = h ^ np.uint64(w)
+        h = h ^ (h >> np.uint64(15))
+        h = (h * P2) & M
+        h = h ^ (h >> np.uint64(13))
+        h = (h * P3) & M
+        h = h ^ (h >> np.uint64(16))
+        out[:, which] = h
+    return out.astype(np.uint32)
+
+
+def ffh_ref(counts: jnp.ndarray, nbins: int) -> jnp.ndarray:
+    """Oracle for ffh_pallas: zeros are padding and excluded."""
+    counts = counts.reshape(-1).astype(jnp.int32)
+    clipped = jnp.minimum(counts, nbins)
+    bins = jnp.arange(1, nbins + 1, dtype=jnp.int32)
+    return jnp.sum((clipped[:, None] == bins[None, :]).astype(jnp.int32), axis=0)

@@ -1,0 +1,7 @@
+"""Model zoo: unified transformer covering all ten assigned architectures."""
+
+from .config import ModelConfig
+from .layers import Param, unzip_params, zip_params
+from .model import Model, build_model
+
+__all__ = ["ModelConfig", "Param", "unzip_params", "zip_params", "Model", "build_model"]

@@ -1,0 +1,277 @@
+"""GQA attention: training (full / sliding-window / local) and decode paths.
+
+Decode uses a dense KV cache of shape (B, S_cache, KVH, hd); sliding-window
+mixers allocate only ``window`` slots and index them as a ring buffer, which
+is what makes ``long_500k`` decoding feasible for mixtral/recurrentgemma —
+state stays O(window), not O(seq).
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.act_sharding import shard_act
+
+from .scan_mode import scan_unroll
+
+from .layers import Param, ParamFactory, apply_rope
+
+NEG_INF = -1e30
+
+
+def init_attention(pf: ParamFactory, d: int, heads: int, kv_heads: int, head_dim: int) -> dict:
+    return {
+        "wq": pf.normal((d, heads, head_dim), ("embed", "heads", "head_dim")),
+        "wk": pf.normal((d, kv_heads, head_dim), ("embed", "kv_heads", "head_dim")),
+        "wv": pf.normal((d, kv_heads, head_dim), ("embed", "kv_heads", "head_dim")),
+        "wo": pf.normal((heads, head_dim, d), ("heads", "head_dim", "embed")),
+    }
+
+
+def _repeat_kv(k: jnp.ndarray, heads: int) -> jnp.ndarray:
+    kvh = k.shape[-2]
+    if kvh == heads:
+        return k
+    return jnp.repeat(k, heads // kvh, axis=-2)
+
+
+def _mask_bias(seq_q: int, seq_k: int, *, causal: bool, window: int, q_offset: int = 0) -> jnp.ndarray:
+    """(seq_q, seq_k) additive mask; window > 0 keeps keys within that many
+    positions behind the query (sliding-window / local attention)."""
+    qi = jnp.arange(seq_q)[:, None] + q_offset
+    kj = jnp.arange(seq_k)[None, :]
+    ok = jnp.ones((seq_q, seq_k), dtype=bool)
+    if causal:
+        ok &= kj <= qi
+    if window > 0:
+        ok &= kj > qi - window
+    return jnp.where(ok, 0.0, NEG_INF)
+
+
+_KV_CHUNK = 512   # online-softmax KV block (flash-style; never materialize S^2)
+
+
+def _flash_attend(q, k, v, *, causal: bool, window: int, q_offset: int = 0):
+    """Online-softmax attention: scan over KV chunks, O(S * chunk) memory.
+
+    q: (B, Sq, H, D); k, v: (B, Sk, H, D).  This is the jnp formulation of
+    the flash algorithm — on a real TPU the same schedule would live in a
+    Pallas kernel; lowering/roofline-wise the scan already avoids the
+    (B, H, S, S) materialization that dominates naive attention memory.
+    Windowed attention uses the banded path in ``attention_train`` instead.
+    """
+    b, sq, h, d = q.shape
+    sk = k.shape[1]
+    if scan_unroll():
+        # cost-measurement mode: scan-free naive attention (identical FLOPs:
+        # the flash schedule computes the full S^2 band too)
+        scale = d ** -0.5
+        logits = jnp.einsum("bshd,bthd->bhst", q.astype(jnp.float32) * scale, k.astype(jnp.float32))
+        logits = logits + _mask_bias(sq, sk, causal=causal, window=window, q_offset=q_offset)[None, None]
+        attn = jax.nn.softmax(logits, axis=-1)
+        out = jnp.einsum("bhst,bthd->bshd", attn, v.astype(jnp.float32))
+        return out.astype(q.dtype)
+    ck = min(_KV_CHUNK, sk)
+    assert sk % ck == 0, (sk, ck)
+    nk = sk // ck
+    scale = d ** -0.5
+
+    qf = shard_act(q.astype(jnp.float32) * scale, ("batch", "attn_seq", "heads", None))
+    ks = jnp.moveaxis(k.reshape(b, nk, ck, h, d), 1, 0)
+    vs = jnp.moveaxis(v.reshape(b, nk, ck, h, d), 1, 0)
+    qi = jnp.arange(sq) + q_offset
+
+    def body(carry, inp):
+        m, l, acc = carry
+        kc, vc, kidx = inp
+        logits = jnp.einsum("bshd,bthd->bhst", qf, kc.astype(jnp.float32))
+        kj = kidx * ck + jnp.arange(ck)
+        ok = jnp.ones((sq, ck), dtype=bool)
+        if causal:
+            ok &= kj[None, :] <= qi[:, None]
+        if window > 0:
+            ok &= kj[None, :] > (qi[:, None] - window)
+        logits = jnp.where(ok[None, None], logits, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(logits, axis=-1))
+        p_ = jnp.exp(logits - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l = shard_act(l * corr + jnp.sum(p_, axis=-1), ("batch", "heads", "attn_seq"))
+        acc = acc * corr[..., None] + jnp.einsum("bhst,bthd->bhsd", p_, vc.astype(jnp.float32))
+        acc = shard_act(acc, ("batch", "heads", "attn_seq", None))
+        return (m_new, l, acc), None
+
+    # flash backward = recompute: without this, scan saves every chunk's
+    # attention weights and gradient memory is S^2 again.
+    body = jax.checkpoint(body, prevent_cse=False)
+
+    m0 = shard_act(jnp.full((b, h, sq), -jnp.inf, jnp.float32), ("batch", "heads", "attn_seq"))
+    l0 = shard_act(jnp.zeros((b, h, sq), jnp.float32), ("batch", "heads", "attn_seq"))
+    a0 = shard_act(jnp.zeros((b, h, sq, d), jnp.float32), ("batch", "heads", "attn_seq", None))
+    (m, l, acc), _ = jax.lax.scan(body, (m0, l0, a0), (ks, vs, jnp.arange(nk)))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return jnp.moveaxis(out, 1, 2).astype(q.dtype)  # (B, Sq, H, D)
+
+
+def _banded_attend(q, k, v, *, window: int):
+    """Sliding-window attention as a banded chunk scan: query chunk i attends
+    the kv chunks covering [i*c - window, (i+1)*c), so FLOPs and memory are
+    O(S * window) — this is what makes SWA/local mixers sub-quadratic.
+    The chunk size is min(window, 512); the band spans window//c + 1 chunks.
+    """
+    b, s, h, d = q.shape
+    c = min(window, 512, s)
+    assert s % c == 0 and window % c == 0, (s, window, c)
+    n = s // c
+    p = window // c                      # previous chunks in the band
+    scale = d ** -0.5
+    qs = shard_act(jnp.moveaxis(q.reshape(b, n, c, h, d), 1, 0).astype(jnp.float32) * scale,
+                   (None, "batch", "attn_seq", "heads", None))
+    ks = jnp.moveaxis(k.reshape(b, n, c, h, d), 1, 0)
+    vs = jnp.moveaxis(v.reshape(b, n, c, h, d), 1, 0)
+
+    def shifted(x, by):
+        if by == 0:
+            return x
+        return jnp.concatenate([jnp.zeros_like(x[:by]), x[:-by]], axis=0)
+
+    k_band = [shifted(ks, p - j) for j in range(p + 1)]   # oldest .. current
+    v_band = [shifted(vs, p - j) for j in range(p + 1)]
+
+    qi = jnp.arange(c)
+    kj = jnp.arange((p + 1) * c)
+    # key j in the band is at absolute offset (j - p*c) relative to the
+    # query chunk start; causal + window bounds:
+    ok = (kj[None, :] <= qi[:, None] + p * c) & (kj[None, :] > qi[:, None] + p * c - window)
+
+    def body(_, inp):
+        qc, kb, vb, idx = inp
+        kcat = jnp.concatenate(list(kb), axis=1).astype(jnp.float32)
+        vcat = jnp.concatenate(list(vb), axis=1).astype(jnp.float32)
+        logits = jnp.einsum("bshd,bthd->bhst", qc, kcat)
+        valid = ok & (kj[None, :] + (idx - p) * c >= 0)
+        logits = jnp.where(valid[None, None], logits, NEG_INF)
+        attn = jax.nn.softmax(logits, axis=-1)
+        out = jnp.einsum("bhst,bthd->bshd", attn, vcat)
+        return None, shard_act(out, ("batch", "attn_seq", "heads", None))
+
+    if scan_unroll():
+        # cost mode: python loop (same math, no while-loop undercounting)
+        outs = [body(None, (qs[i], tuple(kb[i] for kb in k_band),
+                            tuple(vb[i] for vb in v_band), jnp.int32(i)))[1]
+                for i in range(n)]
+        return jnp.stack(outs).transpose(1, 0, 2, 3, 4).reshape(b, s, h, d).astype(q.dtype)
+    body = jax.checkpoint(body, prevent_cse=False)
+    _, outs = jax.lax.scan(body, None, (qs, tuple(k_band), tuple(v_band), jnp.arange(n)))
+    return jnp.moveaxis(outs, 0, 1).reshape(b, s, h, d).astype(q.dtype)
+
+
+def attention_train(
+    p: dict,
+    x: jnp.ndarray,                     # (B, S, d)
+    positions: jnp.ndarray,             # (B, S) or (3, B, S)
+    *,
+    causal: bool = True,
+    window: int = 0,
+    rope_theta: float = 10_000.0,
+    mrope_sections: Tuple[int, ...] = (),
+    use_rope: bool = True,
+    kv_override: Optional[Tuple[jnp.ndarray, jnp.ndarray]] = None,  # cross-attn
+) -> jnp.ndarray:
+    heads = p["wq"].shape[1]
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    if kv_override is None:
+        k = jnp.einsum("bsd,dhk->bshk", x, p["wk"])
+        v = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
+        if use_rope:
+            q = apply_rope(q, positions, rope_theta, mrope_sections)
+            k = apply_rope(k, positions, rope_theta, mrope_sections)
+    else:
+        k, v = kv_override
+    k = _repeat_kv(k, heads)
+    v = _repeat_kv(v, heads)
+
+    if kv_override is not None:
+        out = _flash_attend(q, k, v, causal=False, window=0)
+    elif (
+        window > 0
+        and q.shape[1] > window
+        and q.shape[1] % min(window, 512, q.shape[1]) == 0
+        and window % min(window, 512) == 0
+    ):
+        out = _banded_attend(q, k, v, window=window)
+    else:
+        out = _flash_attend(q, k, v, causal=causal, window=window)
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+
+
+class KVCache(NamedTuple):
+    """Dense or ring-buffer KV cache for one attention layer.
+
+    Whether the slots form a ring (sliding-window mixers) is *static*
+    information owned by the config, passed to ``attention_decode`` as the
+    ``window`` argument — it must not live in the (traced) cache pytree."""
+
+    k: jnp.ndarray          # (B, S_slots, KVH, hd)
+    v: jnp.ndarray
+
+
+def init_kv_cache(batch: int, slots: int, kv_heads: int, head_dim: int, dtype) -> KVCache:
+    shape = (batch, slots, kv_heads, head_dim)
+    return KVCache(jnp.zeros(shape, dtype), jnp.zeros(shape, dtype))
+
+
+def attention_decode(
+    p: dict,
+    x: jnp.ndarray,                     # (B, 1, d)
+    cache: KVCache,
+    pos: jnp.ndarray,                   # scalar int32: current position
+    *,
+    window: int = 0,                    # >0: cache slots form a ring buffer
+    rope_theta: float = 10_000.0,
+    mrope_sections: Tuple[int, ...] = (),
+    cross: bool = False,                # cross-attn: cache is read-only memory
+) -> Tuple[jnp.ndarray, KVCache]:
+    b = x.shape[0]
+    heads = p["wq"].shape[1]
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    posb = jnp.broadcast_to(pos[None], (b, 1)) if pos.ndim == 0 else pos[:, None]
+
+    if cross:
+        k, v = cache.k, cache.v
+        valid = jnp.ones((k.shape[1],), dtype=bool)
+    else:
+        q = apply_rope(q, posb, rope_theta, mrope_sections)
+        k_new = jnp.einsum("bsd,dhk->bshk", x, p["wk"])
+        v_new = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
+        k_new = apply_rope(k_new, posb, rope_theta, mrope_sections)
+        slots = cache.k.shape[1]
+        slot = (pos % slots).astype(jnp.int32)
+        # elementwise iota-masked write instead of dynamic_update_slice: a
+        # DUS at a dynamic index into the slot dimension defeats GSPMD when
+        # that dim is sharded (involuntary full rematerialization — llama4
+        # decode replicated its 51 GiB cache per device; §Perf A1).  The
+        # where() keeps every op elementwise so the slot sharding survives.
+        idx = jnp.arange(slots)
+        sel = (idx == slot)[None, :, None, None]
+        k = jnp.where(sel, k_new, cache.k)
+        v = jnp.where(sel, v_new, cache.v)
+        cache = KVCache(k, v)
+        if window > 0:
+            # ring buffer: slot i holds absolute position matching (i <= pos,
+            # same residue); valid when within the window
+            age = (slot - idx) % slots
+            valid = age <= jnp.minimum(pos, slots - 1)
+        else:
+            valid = idx <= pos
+
+    k = _repeat_kv(k, heads)
+    v = _repeat_kv(v, heads)
+    scale = p["wq"].shape[-1] ** -0.5
+    logits = jnp.einsum("bshk,bthk->bhst", q, k) * scale
+    logits = jnp.where(valid[None, None, None, :], logits, NEG_INF)
+    attn = jax.nn.softmax(logits.astype(jnp.float32), axis=-1).astype(x.dtype)
+    out = jnp.einsum("bhst,bthk->bshk", attn, v)
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"]), cache

@@ -1,0 +1,216 @@
+"""Whisper-style encoder–decoder (arXiv:2212.04356) on the shared layer kit.
+
+The conv frontend is a stub per the assignment: ``input_specs`` provides
+precomputed frame embeddings (B, S_enc, d).  The encoder is bidirectional
+with sinusoidal positions; the decoder is causal with cross-attention whose
+K/V are computed once at encode time and cached (the decode-shape cells
+exercise exactly that path: one decoder token attending over seq_len encoder
+states).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import config as C
+from .scan_mode import scan_unroll
+from .attention import KVCache, attention_decode, attention_train, init_attention, init_kv_cache
+from .layers import (
+    cast_tree,
+    Param,
+    ParamFactory,
+    apply_rope,
+    init_mlp,
+    mlp_apply,
+    rms_norm,
+    sinusoidal_positions,
+    softmax_cross_entropy,
+)
+from repro.act_sharding import shard_act
+
+from .transformer import _stack_groups
+
+
+def _enc_layer_init(pf: ParamFactory, cfg: C.ModelConfig) -> dict:
+    d = cfg.d_model
+    return {
+        "ln1": pf.zeros((d,), ("embed",)),
+        "attn": init_attention(pf, d, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim),
+        "ln2": pf.zeros((d,), ("embed",)),
+        "mlp": init_mlp(pf, d, cfg.d_ff, cfg.act),
+    }
+
+
+def _dec_layer_init(pf: ParamFactory, cfg: C.ModelConfig) -> dict:
+    d = cfg.d_model
+    return {
+        "ln1": pf.zeros((d,), ("embed",)),
+        "self_attn": init_attention(pf, d, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim),
+        "ln_x": pf.zeros((d,), ("embed",)),
+        "cross_attn": init_attention(pf, d, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim),
+        "ln2": pf.zeros((d,), ("embed",)),
+        "mlp": init_mlp(pf, d, cfg.d_ff, cfg.act),
+    }
+
+
+def init_encdec_params(rng, cfg: C.ModelConfig, abstract: bool = False) -> dict:
+    pf = ParamFactory(rng, jnp.dtype(cfg.param_dtype), abstract=abstract)
+    d = cfg.d_model
+    params: Dict[str, Any] = {
+        "embed": pf.embedding((cfg.vocab_size, d), ("vocab", "embed")),
+        "enc_final_ln": pf.zeros((d,), ("embed",)),
+        "dec_final_ln": pf.zeros((d,), ("embed",)),
+        "enc_scan": _stack_groups([_enc_layer_init(pf, cfg) for _ in range(cfg.encoder_layers)]),
+        "dec_scan": _stack_groups([_dec_layer_init(pf, cfg) for _ in range(cfg.num_layers)]),
+    }
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Encoder.
+# ---------------------------------------------------------------------------
+
+
+def encode(params, embeds: jnp.ndarray, cfg: C.ModelConfig, remat: str = "none"):
+    b, s, d = embeds.shape
+    x = embeds.astype(jnp.dtype(cfg.compute_dtype))
+    x = x + sinusoidal_positions(s, d).astype(x.dtype)[None]
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+
+    def body(x, lp):
+        lp = cast_tree(lp, cfg.compute_dtype)
+        x = shard_act(x, ("batch", "seq", "embed_act"))
+        h = rms_norm(x, lp["ln1"], cfg.norm_eps)
+        x = x + attention_train(lp["attn"], h, positions, causal=False, use_rope=False)
+        h = rms_norm(x, lp["ln2"], cfg.norm_eps)
+        x = x + mlp_apply(h, lp["mlp"]["w_in"], lp["mlp"].get("w_gate"), lp["mlp"]["w_out"], cfg.act)
+        return x
+
+    if remat in ("full", "dots"):
+        body = jax.checkpoint(body, prevent_cse=False)
+
+    def scan_fn(x, lp):
+        return body(x, lp), None
+
+    x, _ = jax.lax.scan(scan_fn, x, params["enc_scan"], unroll=scan_unroll())
+    return rms_norm(x, params["enc_final_ln"], cfg.norm_eps)
+
+
+# ---------------------------------------------------------------------------
+# Decoder (train).
+# ---------------------------------------------------------------------------
+
+
+def _dec_layer_train(lp, x, enc, positions, cfg: C.ModelConfig):
+    lp = cast_tree(lp, cfg.compute_dtype)
+    x = shard_act(x, ("batch", "seq", "embed_act"))
+    h = rms_norm(x, lp["ln1"], cfg.norm_eps)
+    x = x + attention_train(
+        lp["self_attn"], h, positions, causal=True, rope_theta=cfg.rope_theta
+    )
+    h = rms_norm(x, lp["ln_x"], cfg.norm_eps)
+    k = jnp.einsum("bsd,dhk->bshk", enc, lp["cross_attn"]["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", enc, lp["cross_attn"]["wv"])
+    x = x + attention_train(lp["cross_attn"], h, positions, kv_override=(k, v))
+    h = rms_norm(x, lp["ln2"], cfg.norm_eps)
+    x = x + mlp_apply(h, lp["mlp"]["w_in"], lp["mlp"].get("w_gate"), lp["mlp"]["w_out"], cfg.act)
+    return x
+
+
+def train_loss(params, batch, cfg: C.ModelConfig, remat: str = "none"):
+    enc = encode(params, batch["encoder_embeds"], cfg, remat)
+    tokens = batch["decoder_tokens"]
+    b, s = tokens.shape
+    x = jnp.take(params["embed"], tokens, axis=0).astype(jnp.dtype(cfg.compute_dtype))
+    x = x * (cfg.d_model ** 0.5)
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+
+    body = _dec_layer_train
+    if remat in ("full", "dots"):
+        body = jax.checkpoint(body, static_argnums=(4,), prevent_cse=False)
+
+    def scan_fn(x, lp):
+        return body(lp, x, enc, positions, cfg), None
+
+    x, _ = jax.lax.scan(scan_fn, x, params["dec_scan"], unroll=scan_unroll())
+    x = rms_norm(x, params["dec_final_ln"], cfg.norm_eps)
+    logits = jnp.einsum("bsd,vd->bsv", x, params["embed"].astype(x.dtype))
+    loss = softmax_cross_entropy(logits, batch["targets"], batch["mask"])
+    return loss, {"ce_loss": loss, "moe_aux": 0.0}
+
+
+# ---------------------------------------------------------------------------
+# Serving: encode-prefill + single-token decode.
+# ---------------------------------------------------------------------------
+
+
+def init_dec_cache(cfg: C.ModelConfig, batch: int, self_slots: int, enc_slots: int):
+    dtype = jnp.dtype(cfg.compute_dtype)
+    layers = cfg.num_layers
+
+    def stacked(shape):
+        return jnp.zeros((layers,) + shape, dtype)
+
+    return {
+        "self_k": stacked((batch, self_slots, cfg.num_kv_heads, cfg.head_dim)),
+        "self_v": stacked((batch, self_slots, cfg.num_kv_heads, cfg.head_dim)),
+        "cross_k": stacked((batch, enc_slots, cfg.num_kv_heads, cfg.head_dim)),
+        "cross_v": stacked((batch, enc_slots, cfg.num_kv_heads, cfg.head_dim)),
+    }
+
+
+def encode_prefill(params, embeds, cfg: C.ModelConfig, self_slots: int):
+    """Encode and precompute per-layer cross-attention K/V caches."""
+    enc = encode(params, embeds, cfg)
+
+    def per_layer(lp):
+        lp = cast_tree(lp, cfg.compute_dtype)
+        k = jnp.einsum("bsd,dhk->bshk", enc, lp["cross_attn"]["wk"])
+        v = jnp.einsum("bsd,dhk->bshk", enc, lp["cross_attn"]["wv"])
+        return k, v
+
+    def scan_fn(_, lp):
+        return None, per_layer(lp)
+
+    _, (ck, cv) = jax.lax.scan(scan_fn, None, params["dec_scan"], unroll=scan_unroll())
+    b = embeds.shape[0]
+    cache = init_dec_cache(cfg, b, self_slots, embeds.shape[1])
+    cache["cross_k"] = ck
+    cache["cross_v"] = cv
+    return enc, cache
+
+
+def decode_step(params, cache, tokens, pos, cfg: C.ModelConfig):
+    """One decoder token against self + cross caches."""
+    x = jnp.take(params["embed"], tokens, axis=0).astype(jnp.dtype(cfg.compute_dtype))
+    x = x * (cfg.d_model ** 0.5)
+
+    def scan_fn(x, inp):
+        lp, sk, sv, ck, cv = inp
+        lp = cast_tree(lp, cfg.compute_dtype)
+        h = rms_norm(x, lp["ln1"], cfg.norm_eps)
+        out, new_self = attention_decode(
+            lp["self_attn"], h, KVCache(sk, sv), pos, rope_theta=cfg.rope_theta
+        )
+        x = x + out
+        h = rms_norm(x, lp["ln_x"], cfg.norm_eps)
+        out, _ = attention_decode(
+            lp["cross_attn"], h, KVCache(ck, cv), pos, cross=True
+        )
+        x = x + out
+        h = rms_norm(x, lp["ln2"], cfg.norm_eps)
+        x = x + mlp_apply(h, lp["mlp"]["w_in"], lp["mlp"].get("w_gate"), lp["mlp"]["w_out"], cfg.act)
+        return x, (new_self.k, new_self.v)
+
+    x, (nk, nv) = jax.lax.scan(
+        scan_fn, x, (params["dec_scan"], cache["self_k"], cache["self_v"], cache["cross_k"], cache["cross_v"]),
+        unroll=scan_unroll(),
+    )
+    new_cache = dict(cache)
+    new_cache["self_k"], new_cache["self_v"] = nk, nv
+    x = rms_norm(x, params["dec_final_ln"], cfg.norm_eps)
+    logits = jnp.einsum("bsd,vd->bsv", x, params["embed"].astype(x.dtype))
+    return logits[:, 0, :], new_cache

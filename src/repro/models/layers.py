@@ -1,0 +1,199 @@
+"""Shared model layers: params-with-logical-axes, norms, RoPE/M-RoPE, MLPs.
+
+Parameters are plain pytrees whose leaves are ``Param(value, axes)`` — the
+``axes`` tuple names each dimension logically ("embed", "heads", "vocab",
+"layers", ...).  ``repro.sharding.partition`` maps logical axes to mesh axes,
+so the same model definition runs data-parallel, FSDP, TP, EP or any mix by
+swapping rule tables (MaxText-style).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class Param(NamedTuple):
+    value: Any           # jnp array (or ShapeDtypeStruct during spec-eval)
+    axes: Tuple[str, ...]
+
+
+def is_param(x) -> bool:
+    return isinstance(x, Param)
+
+
+def unzip_params(tree):
+    """Split a Param tree into (values, axes) trees of identical structure."""
+    values = jax.tree.map(lambda p: p.value, tree, is_leaf=is_param)
+    axes = jax.tree.map(lambda p: p.axes, tree, is_leaf=is_param)
+    return values, axes
+
+
+def zip_params(values, axes):
+    return jax.tree.map(Param, values, axes)
+
+
+def cast_tree(tree, dtype):
+    """Cast every float leaf to the compute dtype (param use-site cast)."""
+    dtype = jnp.dtype(dtype)
+
+    def cast(x):
+        if hasattr(x, "dtype") and jnp.issubdtype(x.dtype, jnp.floating):
+            return x.astype(dtype)
+        return x
+
+    return jax.tree.map(cast, tree)
+
+
+class ParamFactory:
+    """Deterministic param initializer with an auto-split PRNG stream.
+
+    ``abstract=True`` produces ``ShapeDtypeStruct`` leaves instead of arrays
+    — the dry-run path: parameter *structure* (shapes + logical axes) without
+    ever allocating a 400B-parameter model on the host.
+    """
+
+    def __init__(self, rng: Optional[jax.Array], dtype: jnp.dtype, abstract: bool = False):
+        self._rng = rng
+        self.dtype = dtype
+        self.abstract = abstract
+
+    def _next(self) -> jax.Array:
+        self._rng, sub = jax.random.split(self._rng)
+        return sub
+
+    def _make(self, shape, axes, builder) -> Param:
+        if self.abstract:
+            return Param(jax.ShapeDtypeStruct(tuple(shape), self.dtype), tuple(axes))
+        return Param(builder(), tuple(axes))
+
+    def normal(self, shape, axes, stddev: Optional[float] = None) -> Param:
+        stddev = stddev if stddev is not None else 1.0 / np.sqrt(shape[-1] if len(shape) > 1 else shape[0])
+        return self._make(
+            shape, axes,
+            lambda: (jax.random.normal(self._next(), shape, dtype=jnp.float32) * stddev).astype(self.dtype),
+        )
+
+    def embedding(self, shape, axes, stddev: float = 0.02) -> Param:
+        return self._make(
+            shape, axes,
+            lambda: (jax.random.normal(self._next(), shape, dtype=jnp.float32) * stddev).astype(self.dtype),
+        )
+
+    def zeros(self, shape, axes) -> Param:
+        return self._make(shape, axes, lambda: jnp.zeros(shape, dtype=self.dtype))
+
+    def ones(self, shape, axes) -> Param:
+        return self._make(shape, axes, lambda: jnp.ones(shape, dtype=self.dtype))
+
+    def constant(self, value, axes) -> Param:
+        shape = np.shape(value)
+        return self._make(shape, axes, lambda: jnp.asarray(value, dtype=self.dtype))
+
+
+# ---------------------------------------------------------------------------
+# Norms and activations.
+# ---------------------------------------------------------------------------
+
+
+def rms_norm(x: jnp.ndarray, scale: jnp.ndarray, eps: float) -> jnp.ndarray:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + eps)
+    return (x * (1.0 + scale.astype(jnp.float32))).astype(dt)
+
+
+def mlp_apply(x, w_in, w_gate, w_out, act: str):
+    """SwiGLU (w_gate is not None) or GELU MLP."""
+    h = jnp.einsum("...d,df->...f", x, w_in)
+    if act == "swiglu":
+        g = jnp.einsum("...d,df->...f", x, w_gate)
+        h = jax.nn.silu(g) * h
+    else:
+        h = jax.nn.gelu(h)
+    return jnp.einsum("...f,fd->...d", h, w_out)
+
+
+def init_mlp(pf: ParamFactory, d: int, ff: int, act: str) -> dict:
+    p = {
+        "w_in": pf.normal((d, ff), ("embed", "ff")),
+        "w_out": pf.normal((ff, d), ("ff", "embed")),
+    }
+    if act == "swiglu":
+        p["w_gate"] = pf.normal((d, ff), ("embed", "ff"))
+    return p
+
+
+# ---------------------------------------------------------------------------
+# Rotary embeddings (standard and multimodal M-RoPE).
+# ---------------------------------------------------------------------------
+
+
+def rope_freqs(head_dim: int, theta: float) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(
+    x: jnp.ndarray,               # (..., S, H, head_dim)
+    positions: jnp.ndarray,       # (..., S) or (3, ..., S) for M-RoPE
+    theta: float,
+    mrope_sections: Tuple[int, ...] = (),
+) -> jnp.ndarray:
+    """Rotary embedding; with ``mrope_sections`` the frequency bands are
+    assigned to (temporal, height, width) position streams (Qwen2-VL §2.1).
+    For text tokens all three streams carry the same position, which reduces
+    exactly to standard RoPE."""
+    head_dim = x.shape[-1]
+    freqs = rope_freqs(head_dim, theta)  # (hd/2,)
+    if mrope_sections:
+        assert sum(mrope_sections) == head_dim // 2, (mrope_sections, head_dim)
+        if positions.ndim == x.ndim - 2:  # single stream given: broadcast to 3
+            positions = jnp.stack([positions] * 3, axis=0)
+        sec_ids = jnp.repeat(
+            jnp.arange(len(mrope_sections)), jnp.asarray(mrope_sections), total_repeat_length=head_dim // 2
+        )
+        # angle[..., s, f] = pos_stream(sec_ids[f])[..., s] * freqs[f]
+        pos_by_band = jnp.take(positions, sec_ids, axis=0)  # (hd/2, ..., S)
+        angles = jnp.moveaxis(pos_by_band, 0, -1).astype(jnp.float32) * freqs  # (..., S, hd/2)
+    else:
+        angles = positions[..., None].astype(jnp.float32) * freqs  # (..., S, hd/2)
+    cos = jnp.cos(angles)[..., None, :]  # (..., S, 1, hd/2)
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x, 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_positions(seq: int, d: int) -> jnp.ndarray:
+    """Whisper-style sinusoidal absolute position table (S, d)."""
+    pos = np.arange(seq)[:, None]
+    dim = np.arange(d // 2)[None, :]
+    angle = pos / np.power(10_000.0, 2 * dim / d)
+    return jnp.asarray(np.concatenate([np.sin(angle), np.cos(angle)], axis=-1), dtype=jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# Cross-entropy.
+# ---------------------------------------------------------------------------
+
+
+def softmax_cross_entropy(logits: jnp.ndarray, labels: jnp.ndarray, mask: jnp.ndarray, z_loss: float = 1e-4):
+    """Mean next-token loss with optional z-loss; logits (..., V) float.
+
+    Gather-free formulation: the label log-prob comes from a fused
+    where/sum over the vocab axis, so a vocab dimension sharded over the
+    "model" mesh axis reduces with cheap all-reduces instead of the
+    all-gather a take_along_axis would force.
+    """
+    logits = logits.astype(jnp.float32)
+    m = jnp.max(logits, axis=-1)
+    logz = m + jnp.log(jnp.sum(jnp.exp(logits - m[..., None]), axis=-1))
+    vocab_iota = jax.lax.broadcasted_iota(jnp.int32, logits.shape, logits.ndim - 1)
+    picked = jnp.sum(jnp.where(vocab_iota == labels[..., None], logits, 0.0), axis=-1)
+    loss = -(picked - logz) + z_loss * jnp.square(logz)
+    denom = jnp.maximum(jnp.sum(mask), 1.0)
+    return jnp.sum(loss * mask) / denom

@@ -1,0 +1,80 @@
+"""Model facade: one object per architecture with the three jit endpoints.
+
+* ``init(rng)``          -> params pytree (raw arrays)
+* ``abstract_params()``  -> (ShapeDtypeStruct tree, logical-axes tree) — the
+                            dry-run path, no allocation.
+* ``train_loss(params, batch)``
+* ``prefill(params, batch)`` / ``decode_step(params, cache, tokens, pos)``
+* ``init_cache(batch, slots)`` (+ abstract variant)
+
+Batches are dicts; see ``input_specs`` in ``repro.launch.dryrun`` for the
+exact per-shape contents.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import config as C
+from . import encdec, transformer
+from .layers import unzip_params
+
+
+class Model:
+    def __init__(self, cfg: C.ModelConfig, remat: str = "none"):
+        self.cfg = cfg
+        self.remat = remat
+
+    # -- params ----------------------------------------------------------------
+    def _init_raw(self, rng, abstract: bool):
+        if self.cfg.is_encdec:
+            return encdec.init_encdec_params(rng, self.cfg, abstract=abstract)
+        return transformer.init_decoder_params(rng, self.cfg, abstract=abstract)
+
+    def init(self, rng: jax.Array):
+        values, _ = unzip_params(self._init_raw(rng, abstract=False))
+        return values
+
+    def abstract_params(self):
+        return unzip_params(self._init_raw(None, abstract=True))
+
+    # -- training ----------------------------------------------------------------
+    def train_loss(self, params, batch):
+        if self.cfg.is_encdec:
+            return encdec.train_loss(params, batch, self.cfg, self.remat)
+        return transformer.train_loss(params, batch, self.cfg, self.remat)
+
+    # -- serving -------------------------------------------------------------------
+    def prefill(self, params, batch):
+        if self.cfg.is_encdec:
+            enc, cache = encdec.encode_prefill(
+                params, batch["encoder_embeds"], self.cfg, self.cfg.decoder_slots
+            )
+            return enc, cache
+        inputs = batch.get("embeds", batch.get("inputs"))
+        positions = batch.get("positions")
+        if positions is None:
+            b, s = inputs.shape[:2]
+            positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+        return transformer.prefill(params, inputs, positions, self.cfg)
+
+    def decode_step(self, params, cache, tokens, pos):
+        if self.cfg.is_encdec:
+            return encdec.decode_step(params, cache, tokens, pos, self.cfg)
+        return transformer.decode_step(params, cache, tokens, pos, self.cfg)
+
+    def init_cache(self, batch_size: int, slots: int, enc_slots: int = 0):
+        if self.cfg.is_encdec:
+            return encdec.init_dec_cache(self.cfg, batch_size, slots, enc_slots)
+        return transformer.init_cache(self.cfg, batch_size, slots)
+
+    def abstract_cache(self, batch_size: int, slots: int, enc_slots: int = 0):
+        return jax.eval_shape(lambda: self.init_cache(batch_size, slots, enc_slots))
+
+
+def build_model(cfg: C.ModelConfig, remat: str = "none") -> Model:
+    return Model(cfg, remat=remat)

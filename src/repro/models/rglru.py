@@ -1,0 +1,100 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin, arXiv:2402.19427).
+
+The recurrence is diagonal-linear:  h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) *
+(i_t * x_t), with the gated decay a_t = exp(-c * softplus(Lambda) *
+sigmoid(W_a x_t)).  Training/prefill evaluates it with an associative scan
+(O(log S) depth); decode is the one-step update.  The surrounding block is
+Griffin's: two input branches (conv1d+RG-LRU and GeLU gate), multiplied, and
+projected out.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.act_sharding import shard_act
+
+from .layers import ParamFactory
+
+_C = 8.0  # Griffin's decay temperature
+
+
+def init_rglru(pf: ParamFactory, d: int, rnn_dim: int, conv_width: int) -> dict:
+    return {
+        "w_x": pf.normal((d, rnn_dim), ("embed", "rnn")),
+        "w_gate_branch": pf.normal((d, rnn_dim), ("embed", "rnn")),
+        "w_out": pf.normal((rnn_dim, d), ("rnn", "embed")),
+        "conv_w": pf.normal((conv_width, rnn_dim), ("conv", "rnn"), stddev=0.1),
+        "conv_b": pf.zeros((rnn_dim,), ("rnn",)),
+        "w_input_gate": pf.normal((rnn_dim, rnn_dim), ("rnn", "rnn_out")),
+        "w_a_gate": pf.normal((rnn_dim, rnn_dim), ("rnn", "rnn_out")),
+        "lam": pf.constant(jnp.linspace(0.5, 4.0, rnn_dim), ("rnn",)),
+    }
+
+
+def _decay(p: dict, u: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Per-step decay a_t and input gate i_t from the branch activations."""
+    gate_a = jax.nn.sigmoid(jnp.einsum("...r,rs->...s", u, p["w_a_gate"]))
+    log_a = -_C * jax.nn.softplus(p["lam"]) * gate_a        # (..., rnn) in (-inf, 0)
+    a = jnp.exp(log_a)
+    i = jax.nn.sigmoid(jnp.einsum("...r,rs->...s", u, p["w_input_gate"]))
+    return a, i
+
+
+def _conv1d(p: dict, u: jnp.ndarray, state: jnp.ndarray = None):
+    """Causal depthwise temporal conv, width W.  ``state``: (B, W-1, rnn)."""
+    w = p["conv_w"]                    # (W, rnn)
+    width = w.shape[0]
+    if state is None:
+        pad = jnp.zeros((u.shape[0], width - 1, u.shape[-1]), u.dtype)
+    else:
+        pad = state
+    ext = jnp.concatenate([pad, u], axis=1)       # (B, W-1+S, rnn)
+    out = sum(ext[:, i : i + u.shape[1], :] * w[i] for i in range(width))
+    new_state = ext[:, -(width - 1) :, :]
+    return out + p["conv_b"], new_state
+
+
+class RGLRUState(NamedTuple):
+    h: jnp.ndarray           # (B, rnn)
+    conv: jnp.ndarray        # (B, conv_width-1, rnn)
+
+
+def init_rglru_state(batch: int, rnn_dim: int, conv_width: int, dtype) -> RGLRUState:
+    return RGLRUState(
+        jnp.zeros((batch, rnn_dim), jnp.float32),
+        jnp.zeros((batch, conv_width - 1, rnn_dim), dtype),
+    )
+
+
+def rglru_train(p: dict, x: jnp.ndarray) -> jnp.ndarray:
+    """(B, S, d) -> (B, S, d) via associative scan over the diagonal recurrence."""
+    u = jnp.einsum("bsd,dr->bsr", x, p["w_x"])
+    u, _ = _conv1d(p, u)
+    a, i = _decay(p, u)
+    gated = (jnp.sqrt(jnp.maximum(1.0 - jnp.square(a), 1e-12)) * i * u).astype(jnp.float32)
+
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 * a2, b1 * a2 + b2
+
+    a_s, h = jax.lax.associative_scan(combine, (a.astype(jnp.float32), gated), axis=1)
+    h = shard_act(h, ("batch", "attn_seq", "rnn_act"))
+    branch = jax.nn.gelu(jnp.einsum("bsd,dr->bsr", x, p["w_gate_branch"]))
+    return jnp.einsum("bsr,rd->bsd", (h.astype(x.dtype) * branch), p["w_out"])
+
+
+def rglru_decode(p: dict, x: jnp.ndarray, state: RGLRUState) -> Tuple[jnp.ndarray, RGLRUState]:
+    """One-token step: x (B, 1, d) -> (B, 1, d)."""
+    u = jnp.einsum("bsd,dr->bsr", x, p["w_x"])
+    u, conv_state = _conv1d(p, u, state.conv)
+    a, i = _decay(p, u)
+    gated = jnp.sqrt(jnp.maximum(1.0 - jnp.square(a), 1e-12)) * i * u
+    h = a[:, 0].astype(jnp.float32) * state.h + gated[:, 0].astype(jnp.float32)
+    branch = jax.nn.gelu(jnp.einsum("bsd,dr->bsr", x, p["w_gate_branch"]))
+    out = jnp.einsum("bsr,rd->bsd", h[:, None].astype(x.dtype) * branch, p["w_out"])
+    return out, RGLRUState(h, conv_state)

@@ -1,0 +1,211 @@
+"""RWKV6 "Finch" time-mix and channel-mix (arXiv:2404.05892).
+
+Attention-free: per head h the state S in R^{K x V} evolves as
+
+    S_t = diag(w_t) S_{t-1} + k_t^T v_t          (w_t: data-dependent decay)
+    o_t = r_t (S_{t-1} + diag(u) k_t^T v_t)
+
+Training/prefill uses the chunked-parallel (GLA-style) form: within a chunk
+of C tokens the pairwise decay products telescope through cumulative
+log-decays, so intra-chunk work is two (C x K)@(K x C) matmuls per head —
+MXU-friendly — and the state recurs only across chunks (lax.scan).  Decode
+is the exact one-step recurrence; both paths are validated against each
+other in tests/test_rwkv6.py.
+
+Numerics: log-decays are clamped to [-2.5, -1e-4] per step so the factored
+exp() terms stay inside float32 range for the chunk size used (see
+_CHUNK); heavily-decayed contributions lose relative precision exactly where
+they are negligible.
+
+Simplification vs the released model (recorded in DESIGN.md): token-shift
+interpolation coefficients are static parameters (RWKV6 makes them
+data-dependent via a low-rank MLP); the decay keeps its data-dependent
+low-rank form, which is the part that matters for the architecture's
+character (the "data-dependent decay" in the assignment line).
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.act_sharding import shard_act
+
+from .scan_mode import scan_unroll
+
+from .layers import ParamFactory
+
+_CHUNK = 32
+_LOGW_MIN, _LOGW_MAX = -2.5, -1e-4
+_DECAY_RANK = 64
+
+
+def init_rwkv_tm(pf: ParamFactory, d: int, heads: int, head_dim: int) -> dict:
+    hk = heads * head_dim
+    return {
+        "mu_r": pf.constant(jnp.full((d,), 0.5), ("embed",)),
+        "mu_k": pf.constant(jnp.full((d,), 0.5), ("embed",)),
+        "mu_v": pf.constant(jnp.full((d,), 0.5), ("embed",)),
+        "mu_g": pf.constant(jnp.full((d,), 0.5), ("embed",)),
+        "mu_w": pf.constant(jnp.full((d,), 0.5), ("embed",)),
+        "w_r": pf.normal((d, hk), ("embed", "heads_flat")),
+        "w_k": pf.normal((d, hk), ("embed", "heads_flat")),
+        "w_v": pf.normal((d, hk), ("embed", "heads_flat")),
+        "w_g": pf.normal((d, hk), ("embed", "heads_flat")),
+        "w_o": pf.normal((hk, d), ("heads_flat", "embed")),
+        "decay_base": pf.constant(jnp.linspace(-1.5, -0.5, hk).reshape(heads, head_dim), ("heads", "head_dim")),
+        "decay_lora_a": pf.normal((d, _DECAY_RANK), ("embed", "lora")),
+        "decay_lora_b": pf.normal((_DECAY_RANK, hk), ("lora", "heads_flat"), stddev=0.01),
+        "bonus_u": pf.constant(jnp.zeros((heads, head_dim)) + 0.5, ("heads", "head_dim")),
+        "ln_scale": pf.ones((heads, head_dim), ("heads", "head_dim")),
+    }
+
+
+def init_rwkv_cm(pf: ParamFactory, d: int, ff: int) -> dict:
+    return {
+        "mu_r": pf.constant(jnp.full((d,), 0.5), ("embed",)),
+        "mu_k": pf.constant(jnp.full((d,), 0.5), ("embed",)),
+        "w_r": pf.normal((d, d), ("embed", "embed_out")),
+        "w_k": pf.normal((d, ff), ("embed", "ff")),
+        "w_v": pf.normal((ff, d), ("ff", "embed")),
+    }
+
+
+class RWKVState(NamedTuple):
+    s: jnp.ndarray        # (B, H, K, V) float32 wkv state
+    shift_tm: jnp.ndarray  # (B, d) previous token (time-mix)
+    shift_cm: jnp.ndarray  # (B, d) previous token (channel-mix)
+
+
+def init_rwkv_state(batch: int, heads: int, head_dim: int, d: int, dtype) -> RWKVState:
+    return RWKVState(
+        jnp.zeros((batch, heads, head_dim, head_dim), jnp.float32),
+        jnp.zeros((batch, d), dtype),
+        jnp.zeros((batch, d), dtype),
+    )
+
+
+def _token_shift(x: jnp.ndarray, prev: jnp.ndarray) -> jnp.ndarray:
+    """shifted[t] = x[t-1]; shifted[0] = prev (carry across chunks/steps)."""
+    return jnp.concatenate([prev[:, None, :], x[:, :-1, :]], axis=1)
+
+
+def _mix(x, xs, mu):
+    return x * mu + xs * (1.0 - mu)
+
+
+def _projections(p: dict, x: jnp.ndarray, xs: jnp.ndarray, heads: int, hd: int):
+    b, s, _ = x.shape
+    r = jnp.einsum("bsd,dk->bsk", _mix(x, xs, p["mu_r"]), p["w_r"]).reshape(b, s, heads, hd)
+    k = jnp.einsum("bsd,dk->bsk", _mix(x, xs, p["mu_k"]), p["w_k"]).reshape(b, s, heads, hd)
+    v = jnp.einsum("bsd,dk->bsk", _mix(x, xs, p["mu_v"]), p["w_v"]).reshape(b, s, heads, hd)
+    g = jnp.einsum("bsd,dk->bsk", _mix(x, xs, p["mu_g"]), p["w_g"]).reshape(b, s, heads, hd)
+    wx = _mix(x, xs, p["mu_w"])
+    dec = jnp.einsum("bsd,dr,rk->bsk", wx, p["decay_lora_a"], p["decay_lora_b"]).reshape(b, s, heads, hd)
+    logw = -jnp.exp(p["decay_base"][None, None].astype(jnp.float32) + dec.astype(jnp.float32))
+    logw = jnp.clip(logw, _LOGW_MIN, _LOGW_MAX)   # (b, s, h, k)
+    return r, k, v, g, logw
+
+
+def _head_norm(p, o):
+    # per-head RMS norm (stand-in for RWKV's GroupNorm)
+    var = jnp.mean(jnp.square(o.astype(jnp.float32)), axis=-1, keepdims=True)
+    return (o.astype(jnp.float32) * jax.lax.rsqrt(var + 1e-6) * p["ln_scale"]).astype(o.dtype)
+
+
+def rwkv_tm_train(p: dict, x: jnp.ndarray, heads: int, hd: int) -> jnp.ndarray:
+    """(B, S, d) -> (B, S, d); S must be a multiple of _CHUNK (caller pads)."""
+    b, s, d = x.shape
+    assert s % _CHUNK == 0, f"seq {s} not a multiple of {_CHUNK}"
+    xs = _token_shift(x, jnp.zeros((b, d), x.dtype))
+    r, k, v, g, logw = _projections(p, x, xs, heads, hd)
+    u = p["bonus_u"].astype(jnp.float32)
+
+    nc = s // _CHUNK
+    # (b, h, nc, C, k) layout, f32 for the recurrence
+    def chunked(t):
+        return t.reshape(b, nc, _CHUNK, heads, hd).transpose(0, 3, 1, 2, 4).astype(jnp.float32)
+
+    rc, kc, vc, lw = chunked(r), chunked(k), chunked(v), chunked(logw)
+    lp = jnp.cumsum(lw, axis=3)                      # inclusive log-decay products
+    lp_excl = lp - lw                                # exclusive (lp_{t-1})
+    lp_last = lp[:, :, :, -1:, :]                    # (b,h,nc,1,k)
+
+    q_s = rc * jnp.exp(lp_excl)                      # safe: lp_excl <= 0
+    k_in = kc * jnp.exp(-lp)                         # bounded by clamp * chunk
+    k_st = kc * jnp.exp(lp_last - lp)                # <= 1
+
+    mask = jnp.tril(jnp.ones((_CHUNK, _CHUNK), jnp.float32), k=-1)
+    A = jnp.einsum("bhntk,bhnik->bhnti", q_s, k_in) * mask
+    diag = jnp.einsum("bhntk,hk,bhntk->bhnt", rc, u, kc)
+    o_intra = jnp.einsum("bhnti,bhniv->bhntv", A, vc) + diag[..., None] * vc
+
+    def step(S, inp):
+        q_sc, k_stc, vcc, lpl = inp                  # per-chunk slices
+        o_inter = jnp.einsum("bhtk,bhkv->bhtv", q_sc, S)
+        S = jnp.exp(lpl)[..., None] * S + jnp.einsum("bhtk,bhtv->bhkv", k_stc, vcc)
+        return shard_act(S, ("batch", "heads", None, None)), o_inter
+
+    S0 = shard_act(jnp.zeros((b, heads, hd, hd), jnp.float32), ("batch", "heads", None, None))
+    xs_sc = (
+        jnp.moveaxis(q_s, 2, 0),
+        jnp.moveaxis(k_st, 2, 0),
+        jnp.moveaxis(vc, 2, 0),
+        jnp.moveaxis(lp_last[:, :, :, 0, :], 2, 0),
+    )
+    if scan_unroll():
+        # cost mode: associative scan over the (diag-decay, update) monoid so
+        # every chunk's matmuls appear in the HLO (no while-loop body-once)
+        D = jnp.exp(lp_last[:, :, :, 0, :])[..., None]          # (b,h,nc,k,1)
+        U = jnp.einsum("bhntk,bhntv->bhnkv", k_st, vc)          # per-chunk update
+
+        def comb(a, b2):
+            d1, u1 = a
+            d2, u2 = b2
+            return d1 * d2, u1 * d2 + u2
+
+        Ds, Ss = jax.lax.associative_scan(comb, (D, U), axis=2)  # inclusive
+        S_prev = jnp.concatenate([jnp.zeros_like(Ss[:, :, :1]), Ss[:, :, :-1]], axis=2)
+        o_inter = jnp.einsum("bhntk,bhnkv->bhntv", q_s, S_prev)
+        o = o_intra + o_inter
+    else:
+        _, o_inter = jax.lax.scan(step, S0, xs_sc)
+        o = o_intra + jnp.moveaxis(o_inter, 0, 2)        # (b,h,nc,C,v)
+    o = o.transpose(0, 2, 3, 1, 4).reshape(b, s, heads, hd)
+    o = _head_norm(p, o) * jax.nn.silu(g.astype(jnp.float32)).astype(o.dtype)
+    return jnp.einsum("bsk,kd->bsd", o.reshape(b, s, heads * hd).astype(x.dtype), p["w_o"])
+
+
+def rwkv_tm_decode(p: dict, x: jnp.ndarray, state_s: jnp.ndarray, shift: jnp.ndarray, heads: int, hd: int):
+    """One token: x (B,1,d); state_s (B,H,K,V) f32; shift (B,d) prev token."""
+    b, _, d = x.shape
+    xs = shift[:, None, :]
+    r, k, v, g, logw = _projections(p, x, xs, heads, hd)
+    u = p["bonus_u"].astype(jnp.float32)
+    rf, kf, vf = (t[:, 0].astype(jnp.float32) for t in (r, k, v))   # (b,h,k)
+    lw = logw[:, 0]                                                  # (b,h,k)
+
+    o = jnp.einsum("bhk,bhkv->bhv", rf, state_s)
+    o = o + jnp.einsum("bhk,bhk,bhv->bhv", rf, u[None] * kf, vf)
+    s_new = jnp.exp(lw)[..., None] * state_s + jnp.einsum("bhk,bhv->bhkv", kf, vf)
+
+    o = o.reshape(b, 1, heads, hd)
+    o = _head_norm(p, o) * jax.nn.silu(g.astype(jnp.float32)).astype(o.dtype)
+    out = jnp.einsum("bsk,kd->bsd", o.reshape(b, 1, heads * hd).astype(x.dtype), p["w_o"])
+    return out, s_new, x[:, 0, :]
+
+
+def rwkv_cm_train(p: dict, x: jnp.ndarray) -> jnp.ndarray:
+    xs = _token_shift(x, jnp.zeros((x.shape[0], x.shape[-1]), x.dtype))
+    r = jax.nn.sigmoid(jnp.einsum("bsd,de->bse", _mix(x, xs, p["mu_r"]), p["w_r"]))
+    k = jnp.square(jax.nn.relu(jnp.einsum("bsd,df->bsf", _mix(x, xs, p["mu_k"]), p["w_k"])))
+    return r * jnp.einsum("bsf,fd->bsd", k, p["w_v"])
+
+
+def rwkv_cm_decode(p: dict, x: jnp.ndarray, shift: jnp.ndarray):
+    xs = shift[:, None, :]
+    r = jax.nn.sigmoid(jnp.einsum("bsd,de->bse", _mix(x, xs, p["mu_r"]), p["w_r"]))
+    k = jnp.square(jax.nn.relu(jnp.einsum("bsd,df->bsf", _mix(x, xs, p["mu_k"]), p["w_k"])))
+    return r * jnp.einsum("bsf,fd->bsd", k, p["w_v"]), x[:, 0, :]

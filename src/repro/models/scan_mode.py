@@ -1,0 +1,30 @@
+"""Scan-vs-unroll switch for layer stacks.
+
+Production lowering scans over layer groups (O(1) HLO, fast compiles).  But
+XLA's ``cost_analysis`` counts a while-loop body ONCE — so FLOPs/bytes/
+collective counts from a scanned module are per-body, not per-step.  The
+dry-run therefore lowers each cell twice: scanned (memory analysis, compile
+proof) and unrolled (true per-step costs).  ``unrolled()`` is the context
+the second lowering uses.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import threading
+
+_state = threading.local()
+
+
+@contextlib.contextmanager
+def unrolled():
+    prev = getattr(_state, "unroll", False)
+    _state.unroll = True
+    try:
+        yield
+    finally:
+        _state.unroll = prev
+
+
+def scan_unroll() -> bool:
+    return getattr(_state, "unroll", False)

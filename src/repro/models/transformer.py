@@ -1,0 +1,512 @@
+"""Decoder-only transformer assembly over the block-kind zoo.
+
+Layers are grouped by the config's ``block_pattern`` period and evaluated
+with ``jax.lax.scan`` over stacked per-group parameters, so the lowered HLO
+is O(pattern period), not O(num_layers) — essential for compiling 95-layer
+configs quickly and for keeping remat policies uniform.  A non-divisible
+remainder (e.g. recurrentgemma's 26 = 8x3 + 2) is applied unrolled.
+
+Three endpoints per model: ``train_loss``, ``prefill`` (returns a filled
+cache), and ``decode_step`` (one token against the cache).  Caches are
+pytrees stacked the same way as params so decode also scans.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, List, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import config as C
+from .scan_mode import scan_unroll
+from .attention import (
+    KVCache,
+    attention_decode,
+    attention_train,
+    init_attention,
+    init_kv_cache,
+)
+from repro.act_sharding import shard_act
+
+from .layers import Param, ParamFactory, cast_tree, init_mlp, mlp_apply, rms_norm, softmax_cross_entropy
+from .moe import init_moe, moe_apply
+from .rglru import (
+    RGLRUState,
+    init_rglru,
+    init_rglru_state,
+    rglru_decode,
+    rglru_train,
+)
+from .rwkv6 import (
+    init_rwkv_cm,
+    init_rwkv_state,
+    init_rwkv_tm,
+    rwkv_cm_decode,
+    rwkv_cm_train,
+    rwkv_tm_decode,
+    rwkv_tm_train,
+)
+
+# ---------------------------------------------------------------------------
+# Init.
+# ---------------------------------------------------------------------------
+
+
+def _init_layer(pf: ParamFactory, cfg: C.ModelConfig, mixer: str, mlp: str) -> dict:
+    d = cfg.d_model
+    p: Dict[str, Any] = {
+        "ln1": pf.zeros((d,), ("embed",)),
+        "ln2": pf.zeros((d,), ("embed",)),
+    }
+    if mixer in (C.ATTN, C.ATTN_SWA, C.ATTN_LOCAL):
+        p["mixer"] = init_attention(pf, d, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim)
+    elif mixer == C.RGLRU:
+        p["mixer"] = init_rglru(pf, d, cfg.rnn_dim, cfg.conv_width)
+    elif mixer == C.RWKV:
+        p["mixer"] = init_rwkv_tm(pf, d, cfg.num_heads, cfg.head_dim)
+    else:
+        raise ValueError(mixer)
+    if mlp == C.MLP:
+        p["mlp"] = init_mlp(pf, d, cfg.d_ff, cfg.act)
+    elif mlp == C.MOE:
+        p["mlp"] = init_moe(pf, d, cfg.d_ff, cfg.num_experts, cfg.act)
+    elif mlp == C.RWKV_CM:
+        p["mlp"] = init_rwkv_cm(pf, d, cfg.d_ff)
+    else:
+        raise ValueError(mlp)
+    return p
+
+
+def _stack_groups(layers: List[dict]) -> dict:
+    """Stack identical-structure per-group param trees along a new leading
+    "layers" axis (abstract-aware: ShapeDtypeStruct leaves stay abstract)."""
+
+    def stack(*leaves: Param) -> Param:
+        v0 = leaves[0].value
+        axes = ("layers",) + leaves[0].axes
+        if isinstance(v0, jax.ShapeDtypeStruct):
+            return Param(jax.ShapeDtypeStruct((len(leaves),) + tuple(v0.shape), v0.dtype), axes)
+        return Param(jnp.stack([l.value for l in leaves]), axes)
+
+    return jax.tree.map(stack, *layers, is_leaf=lambda x: isinstance(x, Param))
+
+
+def init_decoder_params(rng: Optional[jax.Array], cfg: C.ModelConfig, abstract: bool = False) -> dict:
+    pf = ParamFactory(rng, jnp.dtype(cfg.param_dtype), abstract=abstract)
+    d = cfg.d_model
+    params: Dict[str, Any] = {}
+    params["embed"] = pf.embedding((cfg.vocab_size, d), ("vocab", "embed"))
+    if not cfg.tie_embeddings:
+        params["unembed"] = pf.normal((d, cfg.vocab_size), ("embed", "vocab"))
+    params["final_ln"] = pf.zeros((d,), ("embed",))
+
+    period = cfg.pattern_period
+    groups = []
+    for _ in range(cfg.scan_groups):
+        groups.append(
+            {f"pos{j}": _init_layer(pf, cfg, *cfg.block_pattern[j]) for j in range(period)}
+        )
+    if groups:
+        params["scan"] = _stack_groups(groups)
+    for j, (mixer, mlp) in enumerate(cfg.remainder_kinds):
+        params[f"rem{j}"] = _init_layer(pf, cfg, mixer, mlp)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Layer application (train / prefill / decode).
+# ---------------------------------------------------------------------------
+
+
+def _apply_mixer_train(p, x, positions, cfg: C.ModelConfig, mixer: str):
+    if mixer == C.ATTN:
+        return attention_train(
+            p, x, positions, causal=True, window=0,
+            rope_theta=cfg.rope_theta, mrope_sections=cfg.mrope_sections,
+        )
+    if mixer == C.ATTN_SWA:
+        return attention_train(
+            p, x, positions, causal=True, window=cfg.attn_window,
+            rope_theta=cfg.rope_theta, mrope_sections=cfg.mrope_sections,
+        )
+    if mixer == C.ATTN_LOCAL:
+        return attention_train(
+            p, x, positions, causal=True, window=cfg.local_window,
+            rope_theta=cfg.rope_theta, mrope_sections=cfg.mrope_sections,
+        )
+    if mixer == C.RGLRU:
+        return rglru_train(p, x)
+    if mixer == C.RWKV:
+        return rwkv_tm_train(p, x, cfg.num_heads, cfg.head_dim)
+    raise ValueError(mixer)
+
+
+def _apply_mlp_train(p, x, cfg: C.ModelConfig, mlp: str):
+    if mlp == C.MLP:
+        return mlp_apply(x, p["w_in"], p.get("w_gate"), p["w_out"], cfg.act), 0.0
+    if mlp == C.MOE:
+        return moe_apply(p, x, top_k=cfg.top_k, capacity_factor=cfg.capacity_factor, act=cfg.act)
+    if mlp == C.RWKV_CM:
+        return rwkv_cm_train(p, x), 0.0
+    raise ValueError(mlp)
+
+
+def _layer_train(p, x, positions, cfg: C.ModelConfig, mixer: str, mlp: str):
+    p = cast_tree(p, cfg.compute_dtype)
+    x = shard_act(x, ("batch", "seq", "embed_act"))
+    h = rms_norm(x, p["ln1"], cfg.norm_eps)
+    x = x + _apply_mixer_train(p["mixer"], h, positions, cfg, mixer)
+    h = rms_norm(x, p["ln2"], cfg.norm_eps)
+    y, aux = _apply_mlp_train(p["mlp"], h, cfg, mlp)
+    return x + y, aux
+
+
+def _group_train(cfg: C.ModelConfig, remat: str):
+    def body(x_aux, gp, positions):
+        x, aux = x_aux
+        for j, (mixer, mlp) in enumerate(cfg.block_pattern):
+            x, a = _layer_train(gp[f"pos{j}"], x, positions, cfg, mixer, mlp)
+            aux = aux + a
+        return (x, aux)
+
+    if remat == "full":
+        body = jax.checkpoint(body, prevent_cse=False)
+    elif remat == "dots":
+        body = jax.checkpoint(
+            body,
+            policy=jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims,
+            prevent_cse=False,
+        )
+    return body
+
+
+def forward_train(params, tokens_or_embeds, positions, cfg: C.ModelConfig, remat: str = "none"):
+    """Backbone forward -> final hidden states (B, S, d) and MoE aux loss."""
+    if tokens_or_embeds.dtype in (jnp.int32, jnp.int64):
+        x = jnp.take(params["embed"], tokens_or_embeds, axis=0)
+        if cfg.tie_embeddings:
+            x = x * (cfg.d_model ** 0.5)
+    else:
+        x = tokens_or_embeds
+    x = x.astype(jnp.dtype(cfg.compute_dtype))
+
+    body = _group_train(cfg, remat)
+    if "scan" in params:
+        def scan_fn(carry, gp):
+            return body(carry, gp, positions), None
+
+        (x, aux), _ = jax.lax.scan(scan_fn, (x, 0.0), params["scan"], unroll=scan_unroll())
+    else:
+        aux = 0.0
+    for j, (mixer, mlp) in enumerate(cfg.remainder_kinds):
+        x, a = _layer_train(params[f"rem{j}"], x, positions, cfg, mixer, mlp)
+        aux = aux + a
+    return rms_norm(x, params["final_ln"], cfg.norm_eps), aux
+
+
+def logits_from_hidden(params, x, cfg: C.ModelConfig):
+    if cfg.tie_embeddings:
+        return jnp.einsum("bsd,vd->bsv", x, params["embed"].astype(x.dtype))
+    return jnp.einsum("bsd,dv->bsv", x, params["unembed"].astype(x.dtype))
+
+
+_LOSS_CHUNK = 512
+
+
+def chunked_ce_loss(params, x, targets, mask, cfg: C.ModelConfig):
+    """Cross-entropy evaluated in sequence chunks so the (B, S, V) logits
+    tensor never materializes whole (the vocab head dominates activation
+    memory otherwise).  Each chunk's logits are recomputed in the backward
+    pass (jax.checkpoint), bounding the loss head at O(B * chunk * V)."""
+    b, s, _ = x.shape
+    if scan_unroll():  # cost mode: single-shot CE (no scan undercounting)
+        logits = logits_from_hidden(params, x, cfg)
+        return softmax_cross_entropy(logits, targets, mask)
+    c = min(_LOSS_CHUNK, s)
+    if s % c:
+        c = s  # fallback: odd lengths evaluate unchunked
+    n = s // c
+
+    def chunk_loss(args):
+        xc, tc, mc = args
+        logits = shard_act(logits_from_hidden(params, xc, cfg), ("batch", "seq", "vocab_act"))
+        logits = logits.astype(jnp.float32)
+        m_ = jnp.max(logits, axis=-1)
+        logz = m_ + jnp.log(jnp.sum(jnp.exp(logits - m_[..., None]), axis=-1))
+        iota = jax.lax.broadcasted_iota(jnp.int32, logits.shape, logits.ndim - 1)
+        picked = jnp.sum(jnp.where(iota == tc[..., None], logits, 0.0), axis=-1)
+        per_tok = (-(picked - logz) + 1e-4 * jnp.square(logz)) * mc
+        return jnp.sum(per_tok)
+
+    chunk_loss = jax.checkpoint(chunk_loss, prevent_cse=False)
+
+    def body(acc, args):
+        return acc + chunk_loss(args), None
+
+    xs = (
+        jnp.moveaxis(x.reshape(b, n, c, -1), 1, 0),
+        jnp.moveaxis(targets.reshape(b, n, c), 1, 0),
+        jnp.moveaxis(mask.reshape(b, n, c), 1, 0),
+    )
+    total, _ = jax.lax.scan(body, jnp.float32(0.0), xs)
+    return total / jnp.maximum(jnp.sum(mask), 1.0)
+
+
+def train_loss(params, batch, cfg: C.ModelConfig, remat: str = "none"):
+    inputs = batch.get("embeds", batch.get("inputs"))
+    positions = batch.get("positions")
+    if positions is None:
+        b, s = inputs.shape[:2]
+        positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+    x, aux = forward_train(params, inputs, positions, cfg, remat)
+    loss = chunked_ce_loss(params, x, batch["targets"], batch["mask"], cfg)
+    total = loss + 0.01 * aux
+    return total, {"ce_loss": loss, "moe_aux": aux}
+
+
+# ---------------------------------------------------------------------------
+# Caches.
+# ---------------------------------------------------------------------------
+
+
+def _layer_cache_shape(cfg: C.ModelConfig, mixer: str, batch: int, slots: int, dtype):
+    if mixer == C.ATTN:
+        return init_kv_cache(batch, slots, cfg.num_kv_heads, cfg.head_dim, dtype)
+    if mixer == C.ATTN_SWA:
+        w = min(cfg.attn_window, slots)
+        return init_kv_cache(batch, w, cfg.num_kv_heads, cfg.head_dim, dtype)
+    if mixer == C.ATTN_LOCAL:
+        w = min(cfg.local_window, slots)
+        return init_kv_cache(batch, w, cfg.num_kv_heads, cfg.head_dim, dtype)
+    if mixer == C.RGLRU:
+        return init_rglru_state(batch, cfg.rnn_dim, cfg.conv_width, dtype)
+    if mixer == C.RWKV:
+        return init_rwkv_state(batch, cfg.num_heads, cfg.head_dim, cfg.d_model, dtype)
+    raise ValueError(mixer)
+
+
+def init_cache(cfg: C.ModelConfig, batch: int, slots: int):
+    """Decode cache pytree: scan-stacked groups + remainder layers."""
+    dtype = jnp.dtype(cfg.compute_dtype)
+    cache: Dict[str, Any] = {}
+    if cfg.scan_groups:
+        def stack(*leaves):
+            return jnp.stack(leaves)
+
+        groups = [
+            {
+                f"pos{j}": _layer_cache_shape(cfg, cfg.block_pattern[j][0], batch, slots, dtype)
+                for j in range(cfg.pattern_period)
+            }
+            for _ in range(cfg.scan_groups)
+        ]
+        cache["scan"] = jax.tree.map(stack, *groups)
+    for j, (mixer, _) in enumerate(cfg.remainder_kinds):
+        cache[f"rem{j}"] = _layer_cache_shape(cfg, mixer, batch, slots, dtype)
+    return cache
+
+
+# ---------------------------------------------------------------------------
+# Decode.
+# ---------------------------------------------------------------------------
+
+
+def _apply_mixer_decode(p, x, lc, pos, cfg: C.ModelConfig, mixer: str):
+    if mixer in (C.ATTN, C.ATTN_SWA, C.ATTN_LOCAL):
+        window = {C.ATTN: 0, C.ATTN_SWA: cfg.attn_window, C.ATTN_LOCAL: cfg.local_window}[mixer]
+        out, lc2 = attention_decode(
+            p, x, KVCache(*lc) if not isinstance(lc, KVCache) else lc, pos,
+            window=window, rope_theta=cfg.rope_theta, mrope_sections=cfg.mrope_sections,
+        )
+        return out, lc2
+    if mixer == C.RGLRU:
+        st = RGLRUState(*lc) if not isinstance(lc, RGLRUState) else lc
+        out, st = rglru_decode(p, x, st)
+        return out, st
+    if mixer == C.RWKV:
+        s, sh_tm, sh_cm = lc
+        out, s_new, sh_tm_new = rwkv_tm_decode(p, x, s, sh_tm, cfg.num_heads, cfg.head_dim)
+        from .rwkv6 import RWKVState
+
+        return out, RWKVState(s_new, sh_tm_new, sh_cm)
+    raise ValueError(mixer)
+
+
+def _apply_mlp_decode(p, x, lc, cfg: C.ModelConfig, mlp: str):
+    if mlp == C.MLP:
+        return mlp_apply(x, p["w_in"], p.get("w_gate"), p["w_out"], cfg.act), lc
+    if mlp == C.MOE:
+        out, _ = moe_apply(p, x, top_k=cfg.top_k, capacity_factor=4.0, act=cfg.act)
+        return out, lc
+    if mlp == C.RWKV_CM:
+        out, sh_cm_new = rwkv_cm_decode(p, x, lc.shift_cm)
+        from .rwkv6 import RWKVState
+
+        return out, RWKVState(lc.s, lc.shift_tm, sh_cm_new)
+    raise ValueError(mlp)
+
+
+def _layer_decode(p, x, lc, pos, cfg: C.ModelConfig, mixer: str, mlp: str):
+    p = cast_tree(p, cfg.compute_dtype)
+    h = rms_norm(x, p["ln1"], cfg.norm_eps)
+    out, lc = _apply_mixer_decode(p["mixer"], h, lc, pos, cfg, mixer)
+    x = x + out
+    h = rms_norm(x, p["ln2"], cfg.norm_eps)
+    out, lc = _apply_mlp_decode(p["mlp"], h, lc, cfg, mlp)
+    return x + out, lc
+
+
+def decode_step(params, cache, tokens, pos, cfg: C.ModelConfig):
+    """One decode step.  tokens (B, 1) int32 (or (B, 1, d) embeds); pos scalar."""
+    if tokens.dtype in (jnp.int32, jnp.int64):
+        x = jnp.take(params["embed"], tokens, axis=0)
+        if cfg.tie_embeddings:
+            x = x * (cfg.d_model ** 0.5)
+    else:
+        x = tokens
+    x = x.astype(jnp.dtype(cfg.compute_dtype))
+
+    if "scan" in params:
+        def scan_fn(x, inp):
+            gp, gc = inp
+            new_gc = {}
+            for j, (mixer, mlp) in enumerate(cfg.block_pattern):
+                x, lc = _layer_decode(gp[f"pos{j}"], x, gc[f"pos{j}"], pos, cfg, mixer, mlp)
+                new_gc[f"pos{j}"] = lc
+            return x, new_gc
+
+        x, new_scan = jax.lax.scan(scan_fn, x, (params["scan"], cache["scan"]), unroll=scan_unroll())
+        new_cache = dict(cache)
+        new_cache["scan"] = new_scan
+    else:
+        new_cache = dict(cache)
+    for j, (mixer, mlp) in enumerate(cfg.remainder_kinds):
+        x, lc = _layer_decode(params[f"rem{j}"], x, cache[f"rem{j}"], pos, cfg, mixer, mlp)
+        new_cache[f"rem{j}"] = lc
+    x = rms_norm(x, params["final_ln"], cfg.norm_eps)
+    logits = logits_from_hidden(params, x, cfg)
+    return logits[:, 0, :], new_cache
+
+
+# ---------------------------------------------------------------------------
+# Prefill: forward pass that also fills the cache.
+# ---------------------------------------------------------------------------
+
+
+def prefill(params, tokens_or_embeds, positions, cfg: C.ModelConfig):
+    """Full-sequence forward returning (last-position logits, filled cache).
+
+    Implemented as the train forward plus per-layer cache extraction; for
+    recurrent mixers the final state comes from a one-shot recompute of the
+    scan tail (cheap relative to the forward).
+    """
+    b, s = tokens_or_embeds.shape[:2]
+    if tokens_or_embeds.dtype in (jnp.int32, jnp.int64):
+        x = jnp.take(params["embed"], tokens_or_embeds, axis=0)
+        if cfg.tie_embeddings:
+            x = x * (cfg.d_model ** 0.5)
+    else:
+        x = tokens_or_embeds
+    x = x.astype(jnp.dtype(cfg.compute_dtype))
+
+    def layer_prefill(p, x, mixer, mlp):
+        p = cast_tree(p, cfg.compute_dtype)
+        h = rms_norm(x, p["ln1"], cfg.norm_eps)
+        if mixer in (C.ATTN, C.ATTN_SWA, C.ATTN_LOCAL):
+            window = {C.ATTN: 0, C.ATTN_SWA: cfg.attn_window, C.ATTN_LOCAL: cfg.local_window}[mixer]
+            out = attention_train(
+                p["mixer"], h, positions, causal=True, window=window,
+                rope_theta=cfg.rope_theta, mrope_sections=cfg.mrope_sections,
+            )
+            from .layers import apply_rope
+
+            k = jnp.einsum("bsd,dhk->bshk", h, p["mixer"]["wk"])
+            v = jnp.einsum("bsd,dhk->bshk", h, p["mixer"]["wv"])
+            k = apply_rope(k, positions, cfg.rope_theta, cfg.mrope_sections)
+            slots = min(window, s) if window else s
+            idx = (jnp.arange(s) % slots) if window else jnp.arange(s)
+            kc = jnp.zeros((b, slots) + k.shape[2:], k.dtype).at[:, idx].set(k)
+            vc = jnp.zeros((b, slots) + v.shape[2:], v.dtype).at[:, idx].set(v)
+            lc = KVCache(kc, vc)
+        elif mixer == C.RGLRU:
+            out = rglru_train(p["mixer"], h)
+            _, lc = _rglru_tail_state(p["mixer"], h, cfg)  # final recurrent state
+        elif mixer == C.RWKV:
+            out = rwkv_tm_train(p["mixer"], h, cfg.num_heads, cfg.head_dim)
+            lc = _rwkv_tail_state(p["mixer"], h, cfg)
+        x = x + out
+        h2 = rms_norm(x, p["ln2"], cfg.norm_eps)
+        y, _ = _apply_mlp_train(p["mlp"], h2, cfg, mlp)
+        x = x + y
+        if mixer == C.RWKV:
+            lc = lc._replace(shift_cm=h2[:, -1, :])
+        return x, lc
+
+    new_cache: Dict[str, Any] = {}
+    if "scan" in params:
+        def scan_fn(x, gp):
+            gc = {}
+            for j, (mixer, mlp) in enumerate(cfg.block_pattern):
+                x, lc = layer_prefill(gp[f"pos{j}"], x, mixer, mlp)
+                gc[f"pos{j}"] = lc
+            return x, gc
+
+        x, new_cache["scan"] = jax.lax.scan(scan_fn, x, params["scan"], unroll=scan_unroll())
+    for j, (mixer, mlp) in enumerate(cfg.remainder_kinds):
+        x, lc = layer_prefill(params[f"rem{j}"], x, mixer, mlp)
+        new_cache[f"rem{j}"] = lc
+    x = rms_norm(x, params["final_ln"], cfg.norm_eps)
+    logits = logits_from_hidden(params, x[:, -1:, :], cfg)
+    return logits[:, 0, :], new_cache
+
+
+def _rglru_tail_state(p, x, cfg: C.ModelConfig):
+    """Recompute the RG-LRU final hidden state for the cache (prefill)."""
+    from .rglru import _conv1d, _decay
+
+    u = jnp.einsum("bsd,dr->bsr", x, p["w_x"])
+    u, _ = _conv1d(p, u)
+    a, i = _decay(p, u)
+    gated = (jnp.sqrt(jnp.maximum(1.0 - jnp.square(a), 1e-12)) * i * u).astype(jnp.float32)
+
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 * a2, b1 * a2 + b2
+
+    a_s, hseq = jax.lax.associative_scan(combine, (a.astype(jnp.float32), gated), axis=1)
+    conv_tail = jnp.einsum("bsd,dr->bsr", x, p["w_x"])[:, -(cfg.conv_width - 1) :, :]
+    return None, RGLRUState(hseq[:, -1], conv_tail.astype(x.dtype))
+
+
+def _rwkv_tail_state(p, x, cfg: C.ModelConfig):
+    """Final RWKV state after the sequence (recomputed chunked)."""
+    from .rwkv6 import _CHUNK, _projections, _token_shift, RWKVState
+
+    b, s, d = x.shape
+    xs = _token_shift(x, jnp.zeros((b, d), x.dtype))
+    r, k, v, g, logw = _projections(p, x, xs, cfg.num_heads, cfg.head_dim)
+    nc = s // _CHUNK
+    heads, hd = cfg.num_heads, cfg.head_dim
+
+    def chunked(t):
+        return t.reshape(b, nc, _CHUNK, heads, hd).transpose(0, 3, 1, 2, 4).astype(jnp.float32)
+
+    kc, vc, lw = chunked(k), chunked(v), chunked(logw)
+    lp = jnp.cumsum(lw, axis=3)
+    lp_last = lp[:, :, :, -1:, :]
+    k_st = kc * jnp.exp(lp_last - lp)
+
+    def step(S, inp):
+        k_stc, vcc, lpl = inp
+        S = jnp.exp(lpl)[..., None] * S + jnp.einsum("bhtk,bhtv->bhkv", k_stc, vcc)
+        return S, None
+
+    S0 = jnp.zeros((b, heads, hd, hd), jnp.float32)
+    S, _ = jax.lax.scan(
+        step, S0,
+        (jnp.moveaxis(k_st, 2, 0), jnp.moveaxis(vc, 2, 0), jnp.moveaxis(lp_last[:, :, :, 0, :], 2, 0)),
+    )
+    return RWKVState(S, x[:, -1, :], x[:, -1, :])

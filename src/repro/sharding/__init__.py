@@ -1,0 +1,28 @@
+"""Partitioning: logical-axis rules, batch/cache activation specs."""
+
+from .partition import (
+    SERVE_RULES,
+    TRAIN_RULES,
+    batch_axes,
+    batch_dim_spec,
+    param_pspecs,
+    shardings_of,
+    spec_for_axes,
+)
+from .specs import batch_pspecs, cache_pspecs
+from repro.act_sharding import DEFAULT_ACT_RULES, activation_rules, shard_act
+
+__all__ = [
+    "SERVE_RULES",
+    "TRAIN_RULES",
+    "batch_axes",
+    "batch_dim_spec",
+    "param_pspecs",
+    "shardings_of",
+    "spec_for_axes",
+    "batch_pspecs",
+    "cache_pspecs",
+    "DEFAULT_ACT_RULES",
+    "activation_rules",
+    "shard_act",
+]

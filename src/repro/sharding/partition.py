@@ -1,0 +1,113 @@
+"""Logical-axis -> mesh partitioning rules (MaxText-style, divisibility-aware).
+
+Params carry logical axis names (``repro.models.layers.Param``); this module
+turns them into ``PartitionSpec``s for a given mesh and parallelism mode:
+
+* **TP** — "heads"/"kv_heads"/"ff"/"vocab"/"rnn"/"heads_flat" map to the
+  "model" axis.
+* **EP** — "experts" maps to "model" when divisible (llama4's 128 experts on
+  a 16-way axis); otherwise experts stay replicated and their inner "ff"
+  axis takes "model" (mixtral's 8 experts).
+* **FSDP** — "embed" maps to "data", sharding params, grads and optimizer
+  state across the data axis (ZeRO-3-ish; XLA inserts the per-group
+  all-gathers inside the layer scan).
+* **DP/pod** — the batch dimension of activations maps to ("pod", "data").
+
+A mesh axis is used at most once per tensor, and a mapping only applies when
+the dimension size is divisible by the mesh axis size (uneven shardings are
+legal in GSPMD but pad silently; we prefer explicit replication).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# priority-ordered candidate mesh axes per logical axis
+TRAIN_RULES: Dict[str, Tuple[str, ...]] = {
+    "experts": ("model",),
+    "ff": ("model",),
+    "heads": ("model",),
+    "kv_heads": ("model",),
+    "heads_flat": ("model",),
+    "rnn": ("model",),
+    "rnn_out": (),
+    "vocab": ("model",),
+    "embed": ("data",),          # FSDP (dropped when fsdp=False)
+    "embed_out": (),
+    "head_dim": (),
+    "layers": (),
+    "conv": (),
+    "lora": (),
+}
+
+SERVE_RULES: Dict[str, Tuple[str, ...]] = {**TRAIN_RULES, "embed": ()}
+
+
+def _mesh_axis_size(mesh: Mesh, name: str) -> int:
+    return mesh.shape[name]
+
+
+def spec_for_axes(
+    shape: Sequence[int],
+    axes: Sequence[str],
+    mesh: Mesh,
+    rules: Dict[str, Tuple[str, ...]],
+) -> P:
+    """PartitionSpec for one tensor: apply rules left-to-right, each mesh
+    axis at most once, divisibility required."""
+    used = set()
+    out = []
+    for dim, logical in zip(shape, axes):
+        chosen: Optional[str] = None
+        for cand in rules.get(logical, ()):  # unknown logical axes replicate
+            if cand in used or cand not in mesh.shape:
+                continue
+            if dim % _mesh_axis_size(mesh, cand) == 0 and dim > 0:
+                chosen = cand
+                used.add(cand)
+                break
+        out.append(chosen)
+    while out and out[-1] is None:
+        out.pop()
+    return P(*out)
+
+
+def param_pspecs(sds_tree, axes_tree, mesh: Mesh, *, mode: str = "train", fsdp: bool = True):
+    """PartitionSpec tree for a (ShapeDtypeStruct, logical-axes) param pair."""
+    rules = dict(TRAIN_RULES if mode == "train" else SERVE_RULES)
+    if not fsdp:
+        rules["embed"] = ()
+
+    def one(sds, axes):
+        return spec_for_axes(sds.shape, axes, mesh, rules)
+
+    # tree.map follows sds_tree's structure; the axes subtree at each leaf
+    # position (a tuple of logical names) is passed whole via flatten_up_to.
+    return jax.tree.map(one, sds_tree, axes_tree)
+
+
+def batch_axes(mesh: Mesh) -> Tuple[str, ...]:
+    """Mesh axes composing the data-parallel batch dimension."""
+    return tuple(a for a in ("pod", "data") if a in mesh.shape)
+
+
+def batch_dim_spec(mesh: Mesh, batch_size: int):
+    axes = batch_axes(mesh)
+    total = int(np.prod([mesh.shape[a] for a in axes])) if axes else 1
+    if axes and batch_size % total == 0:
+        return axes
+    # try pod-only or data-only before giving up
+    for sub in (("data",), ("pod",)):
+        if all(a in mesh.shape for a in sub) and batch_size % int(np.prod([mesh.shape[a] for a in sub])) == 0:
+            return sub
+    return None
+
+
+def shardings_of(pspec_tree, mesh: Mesh):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), pspec_tree, is_leaf=lambda x: isinstance(x, P)
+    )

@@ -1,0 +1,137 @@
+"""PartitionSpecs for activations: batches and decode caches.
+
+Built *structurally* (mirroring how the model builds its batches and caches)
+rather than by shape heuristics, so a dimension that happens to equal the
+batch size can never be mis-sharded.
+
+Decode-cache policy:
+* batch dim -> ("pod","data") when divisible (decode_32k: B=128 over 32);
+* B=1 (long_500k): KV slots shard over "data" instead (sequence parallel
+  decode) and recurrent state widths shard over "model";
+* KV heads / RWKV heads / rnn width -> "model" when divisible.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.models import config as C
+from repro.models.attention import KVCache
+from repro.models.rglru import RGLRUState
+from repro.models.rwkv6 import RWKVState
+
+from .partition import batch_dim_spec
+
+
+def _div(n: int, mesh: Mesh, axis: str) -> bool:
+    return axis in mesh.shape and n % mesh.shape[axis] == 0 and n > 0
+
+
+def batch_pspecs(cfg: C.ModelConfig, kind: str, batch: int, mesh: Mesh) -> Dict[str, P]:
+    """PartitionSpecs for the train/prefill batch dict (see input_specs)."""
+    b = batch_dim_spec(mesh, batch)
+    tok = P(b, None)
+    emb = P(b, None, None)
+    if cfg.is_encdec:
+        return {
+            "encoder_embeds": emb,
+            "decoder_tokens": tok,
+            "targets": tok,
+            "mask": tok,
+        }
+    specs = {"targets": tok, "mask": tok}
+    if cfg.embed_inputs and cfg.family not in ("vlm",):
+        specs["inputs"] = tok
+    else:
+        specs["embeds"] = emb
+    if kind == "prefill":
+        specs.pop("targets", None)
+        specs.pop("mask", None)
+    return specs
+
+
+def _kv_seq_shard(cfg: C.ModelConfig, mesh: Mesh, batch_spec, slots: int):
+    """KV slots shard over 'model' (sequence-parallel decode attention: the
+    softmax/output reductions over the sharded key axis become cheap
+    all-reduces of (B,1,H) partials).  KV heads rarely divide a 16-way model
+    axis (kv=8/10/4/1), so this is the primary KV-memory partitioner and
+    applies even when the batch dim is also sharded (perf iteration A1 in
+    EXPERIMENTS.md §Perf: llama4 decode went 167.8 -> fits once the cache
+    stopped replicating across 'model').  With an unsharded batch
+    (long_500k) slots take 'data' too."""
+    axes = []
+    rem = slots
+    if batch_spec is None and _div(slots, mesh, "data"):
+        axes.append("data")
+        rem //= mesh.shape["data"]
+    if _div(rem, mesh, "model"):
+        axes.append("model")
+    return tuple(axes) if axes else None
+
+
+def _kv_spec(cfg: C.ModelConfig, mesh: Mesh, batch: int, slots: int, grouped: bool) -> KVCache:
+    b = batch_dim_spec(mesh, batch)
+    seq = _kv_seq_shard(cfg, mesh, b, slots)
+    kvh = None
+    if not (seq and "model" in seq) and _div(cfg.num_kv_heads, mesh, "model"):
+        kvh = "model"
+    dims = (None,) if grouped else ()
+    spec = P(*dims, b, seq, kvh, None)
+    return KVCache(spec, spec)
+
+
+def _rglru_spec(cfg: C.ModelConfig, mesh: Mesh, batch: int, grouped: bool) -> RGLRUState:
+    b = batch_dim_spec(mesh, batch)
+    rnn = "model" if _div(cfg.rnn_dim, mesh, "model") else None
+    dims = (None,) if grouped else ()
+    return RGLRUState(P(*dims, b, rnn), P(*dims, b, None, rnn))
+
+
+def _rwkv_spec(cfg: C.ModelConfig, mesh: Mesh, batch: int, grouped: bool) -> RWKVState:
+    b = batch_dim_spec(mesh, batch)
+    h = "model" if _div(cfg.num_heads, mesh, "model") else None
+    d = "model" if h is None and _div(cfg.d_model, mesh, "model") else None
+    dims = (None,) if grouped else ()
+    return RWKVState(P(*dims, b, h, None, None), P(*dims, b, d), P(*dims, b, d))
+
+
+def _layer_cache_spec(cfg: C.ModelConfig, mixer: str, mesh: Mesh, batch: int, slots: int, grouped: bool):
+    if mixer == C.ATTN:
+        return _kv_spec(cfg, mesh, batch, slots, grouped)
+    if mixer == C.ATTN_SWA:
+        return _kv_spec(cfg, mesh, batch, min(cfg.attn_window, slots), grouped)
+    if mixer == C.ATTN_LOCAL:
+        return _kv_spec(cfg, mesh, batch, min(cfg.local_window, slots), grouped)
+    if mixer == C.RGLRU:
+        return _rglru_spec(cfg, mesh, batch, grouped)
+    if mixer == C.RWKV:
+        return _rwkv_spec(cfg, mesh, batch, grouped)
+    raise ValueError(mixer)
+
+
+def cache_pspecs(cfg: C.ModelConfig, mesh: Mesh, batch: int, slots: int, enc_slots: int = 0):
+    """Spec tree matching Model.init_cache / abstract_cache structure."""
+    if cfg.is_encdec:
+        b = batch_dim_spec(mesh, batch)
+        seq = _kv_seq_shard(cfg, mesh, b, enc_slots) if enc_slots else None
+        kvh = None
+        if not (seq and "model" in seq) and _div(cfg.num_kv_heads, mesh, "model"):
+            kvh = "model"
+        return {
+            "self_k": P(None, b, None, kvh, None),
+            "self_v": P(None, b, None, kvh, None),
+            "cross_k": P(None, b, seq, kvh, None),
+            "cross_v": P(None, b, seq, kvh, None),
+        }
+    specs: Dict[str, Any] = {}
+    if cfg.scan_groups:
+        specs["scan"] = {
+            f"pos{j}": _layer_cache_spec(cfg, cfg.block_pattern[j][0], mesh, batch, slots, True)
+            for j in range(cfg.pattern_period)
+        }
+    for j, (mixer, _) in enumerate(cfg.remainder_kinds):
+        specs[f"rem{j}"] = _layer_cache_spec(cfg, mixer, mesh, batch, slots, False)
+    return specs

@@ -1,0 +1,212 @@
+"""Training loop with checkpoint/restart, failure injection and straggler
+mitigation — the fault-tolerance harness the multi-pod design assumes.
+
+* **Checkpoint/restart**: atomic sharded checkpoints every
+  ``ckpt_every`` steps include params, optimizer state *and* the data
+  pipeline's dedup/estimator state; on any step failure the trainer restores
+  the latest complete checkpoint and replays from there (at-least-once step
+  execution, exactly-once sample accounting via the pipeline state).
+* **Failure injection**: ``chaos`` gets the step index and may raise — tests
+  kill arbitrary steps and assert loss-curve continuity after recovery.
+* **Straggler mitigation**: batches come through a bounded prefetch queue
+  fed by a worker; if the next batch misses its deadline (EMA * factor), a
+  backup producer races it (backup-requests pattern).  Host-level analogue
+  of the data-reassignment you would run fleet-wide.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import queue
+import threading
+import time
+from typing import Any, Callable, Dict, Iterator, Optional
+
+import jax
+import numpy as np
+
+from repro.ckpt import checkpoint as ckpt
+from .optimizer import AdamW
+from .train_step import make_grad_accum_train_step, make_train_step
+
+
+@dataclasses.dataclass
+class TrainerConfig:
+    steps: int = 100
+    ckpt_dir: str = ""
+    ckpt_every: int = 20
+    ckpt_async: bool = False
+    microbatches: int = 1
+    log_every: int = 10
+    straggler_deadline_factor: float = 4.0
+
+
+class PrefetchQueue:
+    """Bounded prefetch with a backup producer racing late batches."""
+
+    def __init__(self, batch_fn: Callable[[], Any], depth: int = 2):
+        self.batch_fn = batch_fn
+        self.q: "queue.Queue[Any]" = queue.Queue(maxsize=depth)
+        self._stop = threading.Event()
+        self._lock = threading.Lock()
+        self.backup_fires = 0
+        self._t = threading.Thread(target=self._producer, daemon=True)
+        self._t.start()
+
+    def _make(self):
+        with self._lock:  # batch_fn state is not thread-safe
+            return self.batch_fn()
+
+    def _producer(self):
+        while not self._stop.is_set():
+            try:
+                self.q.put(self._make(), timeout=0.5)
+            except queue.Full:
+                continue
+
+    def get(self, deadline_s: Optional[float]) -> Any:
+        if deadline_s is None:
+            return self.q.get()
+        try:
+            return self.q.get(timeout=deadline_s)
+        except queue.Empty:
+            # straggler: race a backup producer against the late one
+            self.backup_fires += 1
+            return self._make()
+
+    def stop(self):
+        self._stop.set()
+
+
+class Trainer:
+    def __init__(
+        self,
+        model,
+        opt: AdamW,
+        params,
+        batch_iter: Iterator[Dict[str, np.ndarray]],
+        cfg: TrainerConfig,
+        pipeline_state_fn: Optional[Callable[[], dict]] = None,
+        pipeline_restore_fn: Optional[Callable[[dict], None]] = None,
+        chaos: Optional[Callable[[int], None]] = None,
+    ):
+        self.model = model
+        self.opt = opt
+        self.cfg = cfg
+        self.params = params
+        self.opt_state = opt.init(params)
+        self.batch_iter = batch_iter
+        self.pipeline_state_fn = pipeline_state_fn
+        self.pipeline_restore_fn = pipeline_restore_fn
+        self.chaos = chaos
+        step_fn = (
+            make_grad_accum_train_step(model, opt, cfg.microbatches)
+            if cfg.microbatches > 1
+            else make_train_step(model, opt)
+        )
+        self._step = jax.jit(step_fn, donate_argnums=(0, 1))
+        self.losses: list = []
+        self.restarts = 0
+        self.step = 0
+        self._step_ema: Optional[float] = None
+
+    # -- checkpointing ----------------------------------------------------------
+    def _save(self):
+        if not self.cfg.ckpt_dir:
+            return
+        extra = {"losses": [float(l) for l in self.losses], "step": self.step}
+        if self.pipeline_state_fn:
+            extra["pipeline"] = _jsonable(self.pipeline_state_fn())
+        ckpt.save(
+            self.cfg.ckpt_dir,
+            self.step,
+            {"params": self.params, "opt": self.opt_state},
+            extra=extra,
+            async_save=self.cfg.ckpt_async,
+        )
+
+    def _restore_latest(self) -> bool:
+        if not self.cfg.ckpt_dir:
+            return False
+        step = ckpt.latest_step(self.cfg.ckpt_dir)
+        if step is None:
+            return False
+        tree = ckpt.restore(self.cfg.ckpt_dir, step, {"params": self.params, "opt": self.opt_state})
+        self.params, self.opt_state = tree["params"], tree["opt"]
+        extra = ckpt.restore_extra(self.cfg.ckpt_dir, step)
+        self.losses = list(extra.get("losses", []))[: step]
+        if self.pipeline_restore_fn and "pipeline" in extra:
+            self.pipeline_restore_fn(_unjsonable(extra["pipeline"]))
+        self.step = step
+        return True
+
+    # -- main loop ------------------------------------------------------------------
+    def run(self) -> Dict[str, Any]:
+        prefetch = PrefetchQueue(lambda: next(self.batch_iter))
+        try:
+            while self.step < self.cfg.steps:
+                try:
+                    if self.chaos:
+                        self.chaos(self.step)
+                    deadline = (
+                        self._step_ema * self.cfg.straggler_deadline_factor
+                        if self._step_ema
+                        else None
+                    )
+                    t0 = time.time()
+                    batch = prefetch.get(deadline)
+                    self.params, self.opt_state, loss, _ = self._step(
+                        self.params, self.opt_state, batch
+                    )
+                    loss = float(loss)
+                    dt = time.time() - t0
+                    self._step_ema = dt if self._step_ema is None else 0.9 * self._step_ema + 0.1 * dt
+                    self.losses.append(loss)
+                    self.step += 1
+                    if self.cfg.log_every and self.step % self.cfg.log_every == 0:
+                        print(f"step {self.step:5d} loss {loss:.4f} ({dt*1e3:.0f} ms)")
+                    if self.cfg.ckpt_every and self.step % self.cfg.ckpt_every == 0:
+                        self._save()
+                except KeyboardInterrupt:
+                    raise
+                except Exception as e:  # node failure model: restore + continue
+                    self.restarts += 1
+                    restored = self._restore_latest()
+                    print(f"step {self.step}: failure ({type(e).__name__}: {e}); "
+                          f"restored={restored}; restarts={self.restarts}")
+                    if not restored and self.restarts > 3:
+                        raise
+        finally:
+            prefetch.stop()
+        self._save()
+        return {
+            "losses": self.losses,
+            "restarts": self.restarts,
+            "backup_fires": prefetch.backup_fires,
+            "final_step": self.step,
+        }
+
+
+def _jsonable(obj):
+    """Make numpy-bearing nested state JSON-serializable."""
+    if isinstance(obj, dict):
+        return {str(k): _jsonable(v) for k, v in obj.items()}
+    if isinstance(obj, (list, tuple)):
+        return [_jsonable(v) for v in obj]
+    if isinstance(obj, np.ndarray):
+        return {"__nd__": obj.tolist(), "dtype": str(obj.dtype)}
+    if isinstance(obj, (np.integer,)):
+        return int(obj)
+    if isinstance(obj, (np.floating,)):
+        return float(obj)
+    return obj
+
+
+def _unjsonable(obj):
+    if isinstance(obj, dict):
+        if "__nd__" in obj:
+            return np.asarray(obj["__nd__"], dtype=obj["dtype"])
+        return {k: _unjsonable(v) for k, v in obj.items()}
+    if isinstance(obj, list):
+        return [_unjsonable(v) for v in obj]
+    return obj

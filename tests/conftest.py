@@ -1,0 +1,6 @@
+import os
+import sys
+
+# Tests must see exactly ONE device (the dry-run alone fakes 512); keep jax
+# imports lazy to the first test so no global XLA_FLAGS leak here.
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))

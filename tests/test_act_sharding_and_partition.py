@@ -1,0 +1,60 @@
+"""Logical-axis rules: param specs, divisibility, activation constraints."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.act_sharding import shard_act
+from repro.configs import get_config
+from repro.models import build_model
+from repro.sharding.partition import spec_for_axes
+
+
+class _FakeMesh:
+    def __init__(self, shape):
+        self.shape = shape
+
+
+MESH = _FakeMesh({"data": 16, "model": 16})
+RULES = {"heads": ("model",), "embed": ("data",), "ff": ("model",), "experts": ("model",),
+         "kv_heads": ("model",), "vocab": ("model",)}
+
+
+def test_divisibility_gates_sharding():
+    # 28 heads don't divide 16 -> replicated; ff 18944 does -> model
+    assert spec_for_axes((3584, 28, 128), ("embed", "heads", "head_dim"), MESH, RULES) == P("data")
+    assert spec_for_axes((3584, 18944), ("embed", "ff"), MESH, RULES) == P("data", "model")
+
+
+def test_mesh_axis_used_once_per_tensor():
+    spec = spec_for_axes((64, 14336, 4096), ("experts", "ff", "embed"), MESH, RULES)
+    assert spec == P("model", None, "data")  # ff can't reuse "model"
+
+
+def test_ep_vs_tp_expert_choice():
+    # llama4: 128 experts divide 16 -> EP on experts
+    s = spec_for_axes((128, 5120, 8192), ("experts", "embed", "ff"), MESH, RULES)
+    assert s == P("model", "data")
+    # mixtral: 8 experts don't -> ff gets model
+    s = spec_for_axes((8, 4096, 14336), ("experts", "embed", "ff"), MESH, RULES)
+    assert s == P(None, "data", "model")
+
+
+def test_shard_act_noop_without_context():
+    x = jnp.ones((4, 8))
+    assert shard_act(x, ("batch", None)) is x
+
+
+@pytest.mark.parametrize("arch", ["mixtral-8x7b", "deepseek-67b", "rwkv6-1.6b", "whisper-small"])
+def test_param_specs_cover_all_leaves(arch):
+    from repro.sharding import param_pspecs
+
+    cfg = get_config(arch)
+    sds, axes = build_model(cfg).abstract_params()
+    mesh = _FakeMesh({"data": 16, "model": 16})
+    specs = param_pspecs(sds, axes, mesh, mode="train", fsdp=True)
+    n_specs = len(jax.tree.leaves(specs, is_leaf=lambda x: isinstance(x, P)))
+    n_params = len(jax.tree.leaves(sds))
+    assert n_specs == n_params

@@ -1,0 +1,82 @@
+"""Cache policies + the LDSS-prioritized cache (paper SIV-B)."""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.cache import ARCCache, GlobalCache, LFUCache, LRUCache, PrioritizedCache
+
+
+def test_lru_evicts_least_recent():
+    c = LRUCache()
+    for i in range(4):
+        c.insert(i, i)
+    c.lookup(0)
+    assert c.evict_one()[0] == 1  # 0 was refreshed
+
+
+def test_lfu_evicts_least_frequent():
+    c = LFUCache()
+    for i in range(3):
+        c.insert(i, i)
+    c.lookup(0); c.lookup(0); c.lookup(1)
+    assert c.evict_one()[0] == 2
+
+
+def test_arc_adapts_and_bounds():
+    c = ARCCache(c=16)
+    for i in range(40):
+        c.insert(i, i)
+        if len(c) > 16:
+            c.evict_one()
+    assert len(c) <= 16
+    assert len(c.b1) <= c.c and len(c.b2) <= c.c
+
+
+@given(st.lists(st.tuples(st.integers(0, 3), st.integers(0, 40)), min_size=1, max_size=400))
+@settings(max_examples=40, deadline=None)
+def test_prioritized_cache_capacity_invariant(ops):
+    cache = PrioritizedCache(capacity=16, policy="lru")
+    cache.set_ldss({0: 100.0, 1: 10.0, 2: 1.0, 3: 50.0})
+    for stream, fp in ops:
+        if cache.lookup(stream, fp) is None:
+            cache.admit(stream, fp, fp)
+    assert len(cache) <= 16
+    # owner index consistent with sub-caches
+    total = sum(len(c) for c in cache.streams.values())
+    assert total == cache.total == len(cache.owner)
+
+
+def test_low_ldss_stream_gets_evicted_first():
+    cache = PrioritizedCache(capacity=64, policy="lru", seed=0)
+    cache.set_ldss({0: 1000.0, 1: 50.0})  # 50 clears admission, loses eviction
+    for i in range(32):
+        cache.admit(0, 1000 + i, i)
+    for i in range(200):
+        cache.admit(1, 2000 + i, i)
+    occ = cache.occupancy()
+    # the high-LDSS stream retains a far larger share of its insertions
+    retention0 = occ.get(0, 0) / 32
+    retention1 = occ.get(1, 0) / 200
+    assert retention0 > 2.0 * retention1, occ
+
+
+def test_admission_policy_rejects_tiny_ldss():
+    cache = PrioritizedCache(capacity=64, admission_ratio=0.1)
+    cache.set_ldss({0: 1000.0, 1: 0.5})
+    cache.admit(1, 7, 7)
+    assert cache.lookup(1, 7) is None  # not admitted
+    cache.admit(0, 8, 8)
+    assert cache.lookup(0, 8) == 8
+
+
+def test_cross_stream_duplicate_hit():
+    cache = PrioritizedCache(capacity=64)
+    cache.admit(0, 42, 7)
+    assert cache.lookup(1, 42) == 7  # fingerprints are global across VMs
+
+
+def test_global_cache_baseline():
+    g = GlobalCache(capacity=4, policy="lru")
+    for i in range(10):
+        g.admit(0, i, i)
+    assert len(g) == 4

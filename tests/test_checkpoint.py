@@ -1,0 +1,49 @@
+"""Checkpointing: atomic round-trip, latest-step discovery, async writes."""
+
+import os
+import threading
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.ckpt import checkpoint as ckpt
+
+
+def _tree():
+    return {"params": {"w": jnp.arange(12.0).reshape(3, 4), "b": jnp.ones(5)},
+            "opt": (jnp.zeros(3), jnp.full((2, 2), 7.0))}
+
+
+def test_roundtrip(tmp_path):
+    d = str(tmp_path)
+    tree = _tree()
+    ckpt.save(d, 3, tree, extra={"note": "hi"})
+    assert ckpt.latest_step(d) == 3
+    out = ckpt.restore(d, 3, jax.eval_shape(lambda: tree))
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(out)):
+        np.testing.assert_array_equal(a, b)
+    assert ckpt.restore_extra(d, 3)["note"] == "hi"
+
+
+def test_latest_ignores_incomplete(tmp_path):
+    d = str(tmp_path)
+    ckpt.save(d, 1, _tree())
+    os.makedirs(os.path.join(d, "step_9"))  # crashed save: no manifest
+    assert ckpt.latest_step(d) == 1
+
+
+def test_async_save_joins(tmp_path):
+    d = str(tmp_path)
+    t = ckpt.save(d, 5, _tree(), async_save=True)
+    assert isinstance(t, threading.Thread)
+    t.join(10)
+    assert ckpt.latest_step(d) == 5
+
+
+def test_multiple_steps_pick_newest(tmp_path):
+    d = str(tmp_path)
+    for s in (1, 7, 4):
+        ckpt.save(d, s, _tree())
+    assert ckpt.latest_step(d) == 7

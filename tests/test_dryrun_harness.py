@@ -1,0 +1,55 @@
+"""Dry-run harness units: collective parsing, input specs, skip rules."""
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+# NOTE: importing repro.launch.dryrun sets XLA_FLAGS (512 devices) but jax is
+# already initialized at 1 device by earlier tests in this process; the env
+# var then has no effect here, which is exactly what we want for units.
+from repro.launch.dryrun import LONG_CONTEXT_ARCHS, collective_bytes, input_specs, skip_reason
+from repro.configs import ARCH_IDS, SHAPES, get_config
+
+HLO = """
+  %ar = f32[1024,256]{1,0} all-reduce(f32[1024,256]{1,0} %x), replica_groups={}
+  %ag = bf16[512]{0} all-gather(bf16[32]{0} %y), dimensions={0}
+  %rs = bf16[64,128]{1,0} reduce-scatter(bf16[1024,128]{1,0} %z), dimensions={0}
+  %a2a = f32[16,16]{1,0} all-to-all(f32[16,16]{1,0} %w)
+  %done = f32[8]{0} all-reduce-done(f32[8]{0} %t)
+"""
+
+
+def test_collective_bytes_parser():
+    out = collective_bytes(HLO)
+    assert out["counts"]["all-reduce"] == 1
+    assert out["bytes"]["all-reduce"] == 2 * 1024 * 256 * 4  # 2x for ring AR
+    assert out["bytes"]["all-gather"] == 512 * 2
+    assert out["counts"]["all-to-all"] == 1
+    assert out["total_bytes"] > 0
+
+
+def test_skip_rules_match_design():
+    for arch in ARCH_IDS:
+        r = skip_reason(arch, SHAPES["long_500k"])
+        assert (r is None) == (arch in LONG_CONTEXT_ARCHS), arch
+        assert skip_reason(arch, SHAPES["train_4k"]) is None
+
+
+@pytest.mark.parametrize("arch", ["tinyllama-1.1b", "whisper-small", "qwen2-vl-7b"])
+@pytest.mark.parametrize("shape", ["train_4k", "prefill_32k"])
+def test_input_specs_are_abstract(arch, shape):
+    cfg = get_config(arch)
+    specs = input_specs(cfg, SHAPES[shape])
+    for leaf in jax.tree.leaves(specs):
+        assert isinstance(leaf, jax.ShapeDtypeStruct)
+    if cfg.is_encdec or cfg.family == "vlm":
+        key = "encoder_embeds" if cfg.is_encdec else "embeds"
+        assert specs[key].shape[-1] == cfg.d_model
+
+
+def test_all_40_cells_defined():
+    cells = [(a, s) for a in ARCH_IDS for s in SHAPES]
+    assert len(cells) == 40
+    runnable = [c for c in cells if skip_reason(c[0], SHAPES[c[1]]) is None]
+    skipped = [c for c in cells if skip_reason(c[0], SHAPES[c[1]]) is not None]
+    assert len(runnable) == 33 and len(skipped) == 7

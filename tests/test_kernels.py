@@ -1,0 +1,85 @@
+"""Pallas kernel validation: shape/dtype sweeps vs pure-jnp oracles + an
+independent numpy golden model (interpret mode on CPU)."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.ffh import ffh_from_counts
+from repro.kernels.ops import ffh_counts, fingerprint_blocks, fingerprint_ints
+from repro.kernels.ref import ffh_ref, fingerprint_golden_numpy, fingerprint_ref
+
+
+@pytest.mark.parametrize("b", [1, 7, 256, 300])
+@pytest.mark.parametrize("w", [128, 512, 1024])
+def test_fingerprint_shape_sweep(b, w):
+    rng = np.random.default_rng(b * 1000 + w)
+    x = rng.integers(0, 2**32, size=(b, w), dtype=np.uint32)
+    k = np.asarray(fingerprint_blocks(x))
+    assert k.shape == (b, 4) and k.dtype == np.uint32
+    r = np.asarray(fingerprint_ref(jnp.asarray(x)))
+    np.testing.assert_array_equal(k, r)
+
+
+@pytest.mark.parametrize("dtype", [np.uint32, np.int32, np.float32, np.uint8])
+def test_fingerprint_dtype_sweep(dtype):
+    rng = np.random.default_rng(0)
+    if dtype == np.uint8:
+        x = rng.integers(0, 255, size=(16, 512), dtype=np.uint8)
+    elif dtype == np.float32:
+        x = rng.standard_normal((16, 128)).astype(np.float32)
+    else:
+        x = rng.integers(0, 2**31 - 1, size=(16, 128)).astype(dtype)
+    k = np.asarray(fingerprint_blocks(x))
+    assert k.shape == (16, 4)
+    assert len(np.unique(fingerprint_ints(x))) == 16  # no collisions
+
+
+def test_fingerprint_matches_numpy_golden():
+    rng = np.random.default_rng(7)
+    x = rng.integers(0, 2**32, size=(64, 256), dtype=np.uint32)
+    np.testing.assert_array_equal(np.asarray(fingerprint_blocks(x)), fingerprint_golden_numpy(x))
+
+
+@given(st.integers(0, 2**32 - 1), st.integers(0, 127))
+@settings(max_examples=30, deadline=None)
+def test_fingerprint_bit_sensitivity(value, pos):
+    x = np.full((2, 128), value, dtype=np.uint32)
+    x[1, pos] ^= 1  # flip one bit in one word
+    fps = fingerprint_ints(x)
+    assert fps[0] != fps[1]
+
+
+def test_fingerprint_determinism_and_equality():
+    rng = np.random.default_rng(9)
+    x = rng.integers(0, 2**32, size=(8, 128), dtype=np.uint32)
+    both = fingerprint_ints(np.vstack([x, x]))
+    np.testing.assert_array_equal(both[:8], both[8:])
+
+
+def test_fingerprint_padding_independence():
+    """Same logical content, different padding widths -> different W is
+    hashed distinctly (length is folded in)."""
+    x = np.ones((4, 128), dtype=np.uint32)
+    y = np.ones((4, 256), dtype=np.uint32)
+    assert not np.array_equal(fingerprint_ints(x), fingerprint_ints(y))
+
+
+@pytest.mark.parametrize("n", [10, 1024, 5000])
+@pytest.mark.parametrize("nbins", [8, 40])
+def test_ffh_kernel_sweep(n, nbins):
+    rng = np.random.default_rng(n)
+    c = rng.integers(0, nbins + 20, size=n).astype(np.int32)
+    hk = np.asarray(ffh_counts(c, nbins))
+    hr = np.asarray(ffh_ref(jnp.asarray(c), nbins))
+    np.testing.assert_array_equal(hk, hr)
+    np.testing.assert_array_equal(hk, ffh_from_counts(c[c > 0], max_bins=nbins))
+
+
+@given(st.lists(st.integers(1, 60), min_size=1, max_size=200))
+@settings(max_examples=30, deadline=None)
+def test_ffh_kernel_property(counts):
+    c = np.asarray(counts, dtype=np.int32)
+    hk = np.asarray(ffh_counts(c, 40))
+    assert hk.sum() == len(counts)  # every count lands in exactly one bin

@@ -1,0 +1,61 @@
+"""RWKV6 chunked-vs-stepwise equivalence; RG-LRU scan-vs-loop equivalence."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.layers import ParamFactory, unzip_params
+from repro.models.rglru import init_rglru, init_rglru_state, rglru_decode, rglru_train
+from repro.models.rwkv6 import (
+    _CHUNK,
+    init_rwkv_state,
+    init_rwkv_tm,
+    rwkv_tm_decode,
+    rwkv_tm_train,
+)
+
+
+def test_rwkv_chunked_equals_stepwise():
+    heads, hd, d = 2, 8, 16
+    pf = ParamFactory(jax.random.PRNGKey(0), jnp.float32)
+    p, _ = unzip_params(init_rwkv_tm(pf, d, heads, hd))
+    B, S = 2, 2 * _CHUNK
+    x = jnp.asarray(np.random.default_rng(0).standard_normal((B, S, d)) * 0.3, jnp.float32)
+
+    out_chunked = rwkv_tm_train(p, x, heads, hd)
+
+    st = init_rwkv_state(B, heads, hd, d, jnp.float32)
+    s, shift = st.s, st.shift_tm
+    outs = []
+    for t in range(S):
+        o, s, shift = rwkv_tm_decode(p, x[:, t : t + 1], s, shift, heads, hd)
+        outs.append(o)
+    out_step = jnp.concatenate(outs, axis=1)
+    np.testing.assert_allclose(out_chunked, out_step, atol=2e-3, rtol=2e-2)
+
+
+def test_rglru_scan_equals_loop():
+    d, rnn, conv_w = 16, 16, 4
+    pf = ParamFactory(jax.random.PRNGKey(1), jnp.float32)
+    p, _ = unzip_params(init_rglru(pf, d, rnn, conv_w))
+    B, S = 2, 24
+    x = jnp.asarray(np.random.default_rng(1).standard_normal((B, S, d)) * 0.5, jnp.float32)
+
+    out_scan = rglru_train(p, x)
+
+    st = init_rglru_state(B, rnn, conv_w, jnp.float32)
+    outs = []
+    for t in range(S):
+        o, st = rglru_decode(p, x[:, t : t + 1], st)
+        outs.append(o)
+    out_loop = jnp.concatenate(outs, axis=1)
+    np.testing.assert_allclose(out_scan, out_loop, atol=2e-4, rtol=1e-3)
+
+
+def test_rwkv_decay_clamp_keeps_f32_finite():
+    heads, hd, d = 2, 8, 16
+    pf = ParamFactory(jax.random.PRNGKey(2), jnp.float32)
+    p, _ = unzip_params(init_rwkv_tm(pf, d, heads, hd))
+    x = jnp.asarray(np.random.default_rng(2).standard_normal((1, _CHUNK * 4, d)) * 10, jnp.float32)
+    out = rwkv_tm_train(p, x, heads, hd)
+    assert bool(jnp.all(jnp.isfinite(out)))

@@ -1,0 +1,63 @@
+"""Deterministic regressions for bugs found during development."""
+
+import numpy as np
+
+from repro.core import HPDedup
+from repro.core.ldss import StreamLocalityEstimator
+from repro.core.store import BlockStore, DLRUBuffer
+
+
+def test_toctou_stale_pba_in_pending_run():
+    """Found by hypothesis: a buffered duplicate run referenced a PBA whose
+    last LBA reference was overwritten before the threshold decision.  The
+    decision must re-validate liveness (treat stale hits as misses)."""
+    eng = HPDedup(cache_entries=4, adaptive_threshold=False, fixed_threshold=2)
+    eng.write(0, 0, 7)        # fp 7 at pba0; cache holds 7->pba0
+    eng.write(1, 0, 7)        # stream 1 hit -> pending run [(0, 7, pba0)]
+    eng.write(0, 0, 9)        # overwrite stream0 lba0 -> pba0 refcount 0 -> freed
+    eng.write(1, 1, 7)        # run grows; still pending
+    eng.inline.flush()        # decision: pba0 is dead -> must write through
+    eng.store.check_consistency()
+    rep = eng.finish()
+    assert rep.final_disk_blocks == rep.unique_fingerprints
+    for (stream, lba), pba in eng.store.lba_map.items():
+        assert pba in eng.store.refcount
+
+
+def test_dlru_buffer_dedup_keyed_by_pba():
+    buf = DLRUBuffer(capacity_blocks=2)
+    assert not buf.access(1)
+    assert buf.access(1)          # hit: same content one slot
+    assert not buf.access(2)
+    assert not buf.access(3)      # evicts 1
+    assert not buf.access(1)
+    assert buf.hits == 1
+
+
+def test_estimator_ratio_drop_trigger():
+    est = StreamLocalityEstimator(cache_entries=1 << 20, interval_factor=0.5)
+    for i in range(100):
+        est.observe_write(0, i % 10, was_inline_dup=True)
+    assert est.estimations == 0   # interval not reached
+    est.maybe_trigger_on_ratio_drop(0.9)
+    est.maybe_trigger_on_ratio_drop(0.1)  # >50% drop -> estimate now
+    assert est.estimations == 1
+
+
+def test_estimator_stream_join_quit():
+    est = StreamLocalityEstimator(cache_entries=1 << 20)
+    est.observe_write(5, 1)
+    assert 5 in est.reservoirs
+    est.on_stream_quit(5)
+    assert 5 not in est.reservoirs
+    est.observe_write(5, 2)       # rejoin is fine
+    assert 5 in est.reservoirs
+
+
+def test_interval_factor_self_tunes_toward_1_minus_d():
+    est = StreamLocalityEstimator(cache_entries=2048, interval_factor=0.5)
+    n = est.interval_len
+    for i in range(n):            # ~90% duplicate interval
+        est.observe_write(0, i % max(1, n // 10), was_inline_dup=(i % 10 != 0))
+    assert est.interval_count == 1
+    assert est.interval_factor < 0.3   # ~= 1 - 0.9

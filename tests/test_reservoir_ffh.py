@@ -1,0 +1,54 @@
+"""Reservoir sampling uniformity + FFH correctness."""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.ffh import distinct_of_ffh, ffh_from_counts, occurrence_counts, sample_size_of_ffh
+from repro.core.reservoir import Reservoir, reservoir_indices
+
+
+def test_reservoir_uniform_inclusion():
+    n, k, trials = 200, 20, 3000
+    hits = np.zeros(n)
+    for t in range(trials):
+        r = Reservoir(k, seed=t)
+        for i in range(n):
+            r.offer(i)
+        hits[np.asarray(r.sample(), dtype=int)] += 1
+    p = hits / trials
+    # every element included with prob ~ k/n = 0.1
+    assert abs(p.mean() - k / n) < 0.005
+    assert p.max() < 0.16 and p.min() > 0.05
+
+
+def test_reservoir_state_roundtrip_determinism():
+    r1 = Reservoir(8, seed=42)
+    for i in range(100):
+        r1.offer(i)
+    state = r1.state_dict()
+    r2 = Reservoir.from_state(state)
+    for i in range(100, 200):
+        r1.offer(i)
+        r2.offer(i)
+    assert r1.buf == r2.buf
+
+
+@given(st.lists(st.integers(min_value=0, max_value=50), min_size=0, max_size=300))
+@settings(max_examples=50, deadline=None)
+def test_ffh_identities(sample):
+    sample = np.asarray(sample, dtype=np.uint64)
+    counts = occurrence_counts(sample)
+    f = ffh_from_counts(counts)
+    assert sample_size_of_ffh(f) == sample.size
+    assert distinct_of_ffh(f) == len(np.unique(sample)) if sample.size else True
+
+
+def test_ffh_overflow_bin():
+    counts = np.array([1, 2, 50, 60])
+    f = ffh_from_counts(counts, max_bins=10)
+    assert f[0] == 1 and f[1] == 1 and f[9] == 2  # 50 and 60 clip into bin 10
+
+
+def test_reservoir_indices_distribution():
+    idx = reservoir_indices(100, 10, np.random.default_rng(0))
+    assert len(np.unique(idx)) == 10 and idx.max() < 100

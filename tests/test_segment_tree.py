@@ -1,0 +1,38 @@
+"""Weighted victim-stream selection (Fenwick segments, paper SIV-B)."""
+
+import numpy as np
+
+from repro.core.segment_tree import FenwickSegments
+
+
+def test_draw_proportional_to_weights():
+    t = FenwickSegments()
+    t.set_weight(1, 1.0)
+    t.set_weight(2, 3.0)
+    rng = np.random.default_rng(0)
+    draws = [t.draw(rng) for _ in range(4000)]
+    frac2 = sum(d == 2 for d in draws) / len(draws)
+    assert abs(frac2 - 0.75) < 0.04
+
+
+def test_zero_weight_removes_stream():
+    t = FenwickSegments()
+    t.set_weight(1, 1.0)
+    t.set_weight(2, 2.0)
+    t.set_weight(2, 0.0)
+    rng = np.random.default_rng(1)
+    assert all(t.draw(rng) == 1 for _ in range(100))
+
+
+def test_grow_beyond_initial_capacity():
+    t = FenwickSegments(capacity=4)
+    for s in range(40):
+        t.set_weight(s, float(s + 1))
+    assert abs(t.total_weight() - sum(range(1, 41))) < 1e-9
+    rng = np.random.default_rng(2)
+    assert t.draw(rng) in range(40)
+
+
+def test_empty_draw_returns_none():
+    t = FenwickSegments()
+    assert t.draw(np.random.default_rng(0)) is None

@@ -1,0 +1,72 @@
+"""Property tests: block-store invariants + hybrid dedup exactness."""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.store import BlockStore
+from repro.core.hybrid import HPDedup
+from repro.core.postprocess import PostProcessEngine
+
+ops_strategy = st.lists(
+    st.tuples(
+        st.integers(0, 2),      # stream
+        st.integers(0, 15),     # lba
+        st.integers(1, 12),     # fingerprint (small space -> many dups)
+    ),
+    min_size=1,
+    max_size=200,
+)
+
+
+@given(ops_strategy)
+@settings(max_examples=60, deadline=None)
+def test_store_consistency_and_exactness(ops):
+    store = BlockStore()
+    last_write = {}
+    for stream, lba, fp in ops:
+        store.write_new_block(stream, lba, fp)
+        last_write[(stream, lba)] = fp
+    store.check_consistency()
+    PostProcessEngine(store).run_to_exact()
+    store.check_consistency()
+    # exact: one PBA per live fingerprint
+    assert all(len(pbas) == 1 for pbas in store.fp_table.values())
+    assert store.live_blocks == store.unique_fingerprints()
+    # reconstruction: every LBA still resolves to the content last written
+    for (stream, lba), fp in last_write.items():
+        pba = store.read(stream, lba)
+        assert pba is not None and store.fp_of_pba[pba] == fp
+
+
+@given(ops_strategy, st.integers(1, 16), st.sampled_from(["lru", "lfu", "arc"]))
+@settings(max_examples=30, deadline=None)
+def test_hybrid_is_exact_for_any_cache(ops, cache_entries, policy):
+    eng = HPDedup(cache_entries=cache_entries, policy=policy,
+                  adaptive_threshold=False, fixed_threshold=1)
+    for stream, lba, fp in ops:
+        eng.write(stream, lba, fp)
+    rep = eng.finish(run_post_to_exact=True)
+    eng.store.check_consistency()
+    assert rep.final_disk_blocks == rep.unique_fingerprints
+    assert 0.0 <= rep.inline_dedup_ratio <= 1.0
+    # last write of each (stream, lba) must resolve to its fingerprint
+    last = {}
+    for stream, lba, fp in ops:
+        last[(stream, lba)] = fp
+    for (stream, lba), fp in last.items():
+        pba = eng.store.read(stream, lba)
+        assert pba is not None and eng.store.fp_of_pba[pba] == fp
+
+
+def test_peak_capacity_ordering():
+    """Hybrid peak capacity <= pure post-processing peak (paper Fig. 7)."""
+    from repro.core import PurePostProcessing, generate_workload
+
+    trace, _ = generate_workload("B", total_requests=20_000, seed=5)
+    hp = HPDedup(cache_entries=2048, adaptive_threshold=False, fixed_threshold=1)
+    hp.replay(trace)
+    r1 = hp.finish()
+    pp = PurePostProcessing().replay(trace)
+    r2 = pp.finish()
+    assert r1.peak_disk_blocks <= r2.peak_disk_blocks
+    assert r1.final_disk_blocks == r2.final_disk_blocks  # both exact

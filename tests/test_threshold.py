@@ -1,0 +1,55 @@
+"""Spatial-locality-aware per-stream threshold (paper SIV-C)."""
+
+import numpy as np
+
+from repro.core.threshold import SpatialThreshold
+
+
+def test_initial_threshold_is_16():
+    t = SpatialThreshold()
+    assert t.get(0) == 16
+
+
+def test_balance_formula():
+    t = SpatialThreshold()
+    for _ in range(60):
+        t.record_request(0, is_read=False, is_dup_write=True)
+    for _ in range(40):
+        t.record_request(0, is_read=True)
+    for _ in range(10):
+        t.record_dup_run(0, 8)
+        t.record_read_run(0, 2)
+    # T = (1-r)*mean_dup + r*mean_read = 0.6*8 + 0.4*2 = 5.6
+    assert t.update(0) == 6
+
+
+def test_write_heavy_stream_prefers_dup_length():
+    t = SpatialThreshold()
+    for _ in range(100):
+        t.record_request(1, is_read=False, is_dup_write=True)
+    for _ in range(20):
+        t.record_dup_run(1, 10)
+    assert abs(t.update(1) - 10) <= 1
+
+
+def test_reset_on_dedup_ratio_drop():
+    t = SpatialThreshold()
+    for _ in range(100):
+        t.record_request(0, is_read=False, is_dup_write=True)
+    t.record_dup_run(0, 4)
+    t.update(0)
+    assert t.v_w[0].sum() > 0
+    for _ in range(900):
+        t.record_request(0, is_read=False, is_dup_write=False)
+    t.update(0)  # ratio collapsed >50% -> history cleared
+    assert t.v_w[0].sum() == 0
+
+
+def test_per_stream_independence():
+    t = SpatialThreshold()
+    for _ in range(50):
+        t.record_request(0, is_read=False)
+        t.record_dup_run(0, 2)
+        t.record_request(1, is_read=False)
+        t.record_dup_run(1, 32)
+    assert t.update(0) < t.update(1)

@@ -1,0 +1,69 @@
+"""Trace generator statistics + the paper's headline comparisons."""
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    DIODE,
+    HPDedup,
+    PurePostProcessing,
+    TEMPLATES,
+    generate_workload,
+    make_idedup,
+    trace_stats,
+)
+from repro.core.fingerprint import OP_WRITE
+
+
+@pytest.mark.parametrize("tpl", ["mail", "ftp", "web", "home"])
+def test_single_template_stats(tpl):
+    trace, _ = generate_workload("A", total_requests=30_000, seed=3, mix={tpl: 4})
+    st = trace_stats(trace)
+    t = TEMPLATES[tpl]
+    assert abs(st["write_ratio"] - t.write_ratio) < 0.06, st
+    # duplicate ratio tracks the template's within +-0.15 (overlap adds some)
+    assert abs(st["dup_ratio"] - t.dup_ratio) < 0.15, st
+
+
+def test_workloads_order_by_locality():
+    """A (3:1 good:weak) must out-dedup C (1:3) inline at equal cache."""
+    ratios = {}
+    for wl in ("A", "C"):
+        trace, _ = generate_workload(wl, total_requests=60_000, seed=0)
+        eng = HPDedup(cache_entries=2048, adaptive_threshold=False, fixed_threshold=4)
+        eng.replay(trace)
+        ratios[wl] = eng.finish(run_post_to_exact=False).inline_dedup_ratio
+    assert ratios["A"] > ratios["C"]
+
+
+def test_hpdedup_beats_idedup_on_weak_locality_mix():
+    """Paper Fig. 6 direction: HPDedup > iDedup under cache contention,
+    largest on workload C (weak-locality-heavy)."""
+    trace, _ = generate_workload("C", total_requests=250_000, seed=0)
+    ide = make_idedup(cache_entries=1536)
+    ide.replay(trace)
+    r_ide = ide.finish(run_post_to_exact=False).inline_dedup_ratio
+    hp = HPDedup(cache_entries=1536, adaptive_threshold=False, fixed_threshold=4)
+    hp.replay(trace)
+    r_hp = hp.finish(run_post_to_exact=False).inline_dedup_ratio
+    assert r_hp > r_ide + 0.04, (r_hp, r_ide)
+
+
+def test_capacity_reduction_vs_postprocessing():
+    """Paper Fig. 7 direction: hybrid needs less peak disk than pure post."""
+    trace, _ = generate_workload("A", total_requests=60_000, seed=1)
+    hp = HPDedup(cache_entries=4096, adaptive_threshold=False, fixed_threshold=4)
+    hp.replay(trace)
+    peak_hp = hp.finish().peak_disk_blocks
+    pp = PurePostProcessing().replay(trace)
+    peak_pp = pp.finish().peak_disk_blocks
+    assert peak_hp < 0.8 * peak_pp, (peak_hp, peak_pp)
+
+
+def test_diode_runs_and_is_exact():
+    trace, stream_of = generate_workload("B", total_requests=40_000, seed=2)
+    d = DIODE(cache_entries=2048, stream_templates=stream_of)
+    d.replay(trace)
+    rep = d.finish()
+    assert rep.final_disk_blocks == rep.unique_fingerprints
+    assert 0.0 < rep.inline_dedup_ratio < 1.0
