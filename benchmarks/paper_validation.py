@@ -4,6 +4,10 @@ Each returns a list of result-dict rows (also printed as CSV by run.py).
 Workloads are synthesized to the paper's Table III statistics (see
 repro.core.traces); sizes default to a CPU-friendly scale and grow with
 --full.
+
+Every engine is driven through the ``Engine`` protocol by ``run_replay``
+(columnar batched path; bit-exact vs per-record replay), so the benchmark
+code is engine-agnostic and runs at batched-replay speed.
 """
 
 from __future__ import annotations
@@ -19,6 +23,7 @@ from repro.core import (
     PurePostProcessing,
     generate_workload,
     make_idedup,
+    run_replay,
     trace_stats,
 )
 from repro.core.ffh import occurrence_counts
@@ -45,13 +50,13 @@ def bench_cache_efficiency(n_requests: int = 250_000) -> List[dict]:
         trace, _ = _trace(wl, n_requests)
         for cache in (1024, 2048, 4096, 8192):
             ide = make_idedup(cache_entries=cache)
-            ide.replay(trace)
+            run_replay(ide, trace)
             r_ide = ide.finish(run_post_to_exact=False).inline_dedup_ratio
             row = {"figure": "fig6", "workload": wl, "cache": cache, "iDedup": round(r_ide, 4)}
             for policy in ("lru", "lfu", "arc"):
                 hp = HPDedup(cache_entries=cache, policy=policy,
                              adaptive_threshold=False, fixed_threshold=4)
-                hp.replay(trace)
+                run_replay(hp, trace)
                 row[f"HPDedup-{policy.upper()}"] = round(
                     hp.finish(run_post_to_exact=False).inline_dedup_ratio, 4
                 )
@@ -69,9 +74,9 @@ def bench_capacity(n_requests: int = 250_000, cache: int = 4096) -> List[dict]:
     for wl in ("A", "B", "C"):
         trace, _ = _trace(wl, n_requests)
         hp = HPDedup(cache_entries=cache, adaptive_threshold=False, fixed_threshold=4)
-        hp.replay(trace)
+        run_replay(hp, trace)
         peak_hp = hp.finish().peak_disk_blocks
-        pp = PurePostProcessing().replay(trace)
+        pp = run_replay(PurePostProcessing(), trace)
         rep = pp.finish()
         rows.append({
             "figure": "fig7", "workload": wl,
@@ -94,13 +99,13 @@ def bench_avg_hits(n_requests: int = 250_000) -> List[dict]:
         trace, stream_of = _trace(wl, n_requests)
         for cache in (2048, 4096):
             base = make_idedup(cache_entries=cache, threshold=1)
-            base.replay(trace)
+            run_replay(base, trace)
             rb = base.finish(run_post_to_exact=False)
             dio = DIODE(cache_entries=cache, stream_templates=stream_of)
-            dio.replay(trace)
+            run_replay(dio, trace)
             rd = dio.finish()
             hp = HPDedup(cache_entries=cache, adaptive_threshold=False, fixed_threshold=1)
-            hp.replay(trace)
+            run_replay(hp, trace)
             rh = hp.finish()
             rows.append({
                 "figure": "table4", "workload": wl, "cache": cache,
@@ -128,7 +133,7 @@ def bench_estimation_quality(n_requests: int = 150_000, cache: int = 2048) -> Li
                              use_unseen=use_unseen)
                 # freeze the interval factor (disable the 1-d self-tuning)
                 hp.inline.estimator.cache_entries = cache
-                hp.replay(trace)
+                run_replay(hp, trace)
                 row[mode] = round(hp.finish(run_post_to_exact=False).inline_dedup_ratio, 4)
             rows.append(row)
     return rows
@@ -181,7 +186,7 @@ def bench_threshold(n_requests: int = 120_000) -> List[dict]:
         trace, _ = generate_workload("A", total_requests=n_requests // 2, seed=11, mix={tpl: 4})
         for t in (1, 2, 4, 8, 16):
             hp = HPDedup(cache_entries=8192, adaptive_threshold=False, fixed_threshold=t)
-            hp.replay(trace)
+            run_replay(hp, trace)
             rows.append({
                 "figure": "fig5", "template": tpl, "threshold": t,
                 "inline_ratio": round(hp.finish(run_post_to_exact=False).inline_dedup_ratio, 4),
@@ -189,7 +194,7 @@ def bench_threshold(n_requests: int = 120_000) -> List[dict]:
     # Fig. 10: adaptive per-stream thresholds after replay
     trace, stream_of = _trace("A", n_requests)
     hp = HPDedup(cache_entries=4096, adaptive_threshold=True)
-    hp.replay(trace)
+    run_replay(hp, trace)
     by_tpl: Dict[str, List[float]] = {}
     for sid, tname in stream_of.items():
         if sid in hp.inline.thresholds.threshold:

@@ -2,7 +2,10 @@
 
 Public surface:
 
+* ``Engine`` — the protocol every dedup engine implements; ``run_replay``
+  drives any engine, batched or scalar, over a merged trace.
 * ``HPDedup`` / ``HybridReport`` — the hybrid prioritized dedup mechanism.
+* ``ReplayBatch`` — columnar batched ingestion (``core.batch_replay``).
 * ``StreamLocalityEstimator`` — reservoir + unseen-estimator LDSS tracking.
 * ``PrioritizedCache`` / ``GlobalCache`` — fingerprint caches.
 * ``SpatialThreshold`` — per-stream adaptive duplicate-sequence threshold.
@@ -11,7 +14,12 @@ Public surface:
 * ``generate_workload`` — FIU-like synthetic multi-tenant traces.
 """
 
+from typing import Protocol, runtime_checkable
+
+import numpy as np
+
 from .baselines import DIODE, PurePostProcessing, make_idedup
+from .batch_replay import DEFAULT_BATCH_SIZE, ReplayBatch, run_replay
 from .cache import ARCCache, GlobalCache, LFUCache, LRUCache, PrioritizedCache
 from .ffh import ffh_from_counts, ffh_from_sample, occurrence_counts
 from .fingerprint import OP_READ, OP_WRITE, TRACE_DTYPE, host_fingerprint
@@ -33,7 +41,38 @@ from .unseen import (
     unseen_estimate_ref,
 )
 
+
+@runtime_checkable
+class Engine(Protocol):
+    """One driver interface from trace ingest to reporting.
+
+    ``HPDedup`` (and its ``make_idedup`` configuration), ``DIODE`` and
+    ``PurePostProcessing`` all implement it, so benchmarks, the data
+    pipeline and the serving layer drive every engine the same way:
+    columnar batches in, a ``HybridReport`` out.  Engines additionally
+    expose ``replay_batched`` (the fast columnar path); ``replay`` stays
+    the per-record reference oracle.
+    """
+
+    def write_batch(self, streams, lbas, fps) -> np.ndarray:
+        """Ingest aligned (stream, lba, fingerprint) columns; returns the
+        per-record inline-dedup flags."""
+        ...
+
+    def replay(self, trace: np.ndarray) -> "Engine":
+        """Replay a merged TRACE_DTYPE trace in timestamp order."""
+        ...
+
+    def finish(self) -> HybridReport:
+        """Flush, run the exact post-processing phase, and report."""
+        ...
+
+
 __all__ = [
+    "Engine",
+    "ReplayBatch",
+    "run_replay",
+    "DEFAULT_BATCH_SIZE",
     "DIODE",
     "PurePostProcessing",
     "make_idedup",

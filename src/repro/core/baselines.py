@@ -56,6 +56,11 @@ class PurePostProcessing:
         self._dup_writes = 0
         self._seen: set = set()
 
+    def write_batch(self, streams, lbas, fps) -> np.ndarray:
+        from .batch_replay import postproc_write_batch
+
+        return postproc_write_batch(self, streams, lbas, fps)
+
     def replay(self, trace: np.ndarray) -> "PurePostProcessing":
         assert trace.dtype == TRACE_DTYPE
         for rec in trace:
@@ -71,6 +76,11 @@ class PurePostProcessing:
             self.store.write_new_block(stream, lba, fp)
             self.metrics.writes += 1
         return self
+
+    def replay_batched(self, trace: np.ndarray, batch_size: int = 8192) -> "PurePostProcessing":
+        from .batch_replay import postproc_replay
+
+        return postproc_replay(self, trace, batch_size)
 
     def finish(self) -> HybridReport:
         self.post.run_to_exact()
@@ -174,6 +184,11 @@ class DIODE:
             self.thresholds.update(-1)
             self._writes_since_update = 0
 
+    def write_batch(self, streams, lbas, fps) -> np.ndarray:
+        from .batch_replay import diode_write_batch
+
+        return diode_write_batch(self, streams, lbas, fps)
+
     def replay(self, trace: np.ndarray) -> "DIODE":
         assert trace.dtype == TRACE_DTYPE
         for rec in trace:
@@ -186,10 +201,15 @@ class DIODE:
         self._flush_run()
         return self
 
+    def replay_batched(self, trace: np.ndarray, batch_size: int = 8192) -> "DIODE":
+        from .batch_replay import diode_replay
+
+        return diode_replay(self, trace, batch_size)
+
     def finish(self) -> HybridReport:
         self._flush_run()
         self.post.run_to_exact()
-        self.metrics._cache_inserted = self.cache.inserted  # type: ignore[attr-defined]
+        self.metrics.cache_inserted = self.cache.inserted
         return HybridReport(
             inline=self.metrics,
             post=self.post.metrics,

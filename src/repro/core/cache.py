@@ -233,6 +233,11 @@ class GlobalCache:
     def lookup(self, stream: int, fp: int) -> Optional[int]:
         return self.cache.lookup(fp)
 
+    def contains_many(self, fps) -> np.ndarray:
+        """Side-effect-free membership probe for a batch of fingerprints
+        (the batched replay pre-pass; does not touch recency/frequency)."""
+        return np.fromiter(map(self.cache.__contains__, fps), dtype=bool, count=len(fps))
+
     def admit(self, stream: int, fp: int, pba: int) -> None:
         if fp in self.cache:
             self.cache.insert(fp, pba)
@@ -273,6 +278,7 @@ class PrioritizedCache:
         self.streams: Dict[int, object] = {}
         self.owner: Dict[int, int] = {}  # fp -> stream whose sub-cache holds it
         self.ldss: Dict[int, float] = {}
+        self._best_ldss = 0.0  # memoized max; recomputed on set_ldss only
         self.segments = FenwickSegments()
         self.total = 0
         self.inserted = 0
@@ -280,6 +286,7 @@ class PrioritizedCache:
     # -- LDSS plumbing -------------------------------------------------------
     def set_ldss(self, ldss: Dict[int, float]) -> None:
         self.ldss.update({s: max(float(v), 0.0) for s, v in ldss.items()})
+        self._best_ldss = max(self.ldss.values(), default=0.0)
         self._refresh_weights()
 
     def _refresh_weights(self) -> None:
@@ -297,7 +304,7 @@ class PrioritizedCache:
         """Admission policy: reject streams with very low LDSS relative to the best."""
         if not self.ldss:
             return True  # no estimates yet: admit everything (cold start)
-        best = max(self.ldss.values(), default=0.0)
+        best = self._best_ldss
         mine = self.ldss.get(stream)
         if mine is None:
             return True  # new stream: give it a chance until first estimate
@@ -321,6 +328,11 @@ class PrioritizedCache:
             return None
         return self.streams[holder].lookup(fp)
 
+    def contains_many(self, fps) -> np.ndarray:
+        """Side-effect-free membership probe for a batch of fingerprints
+        (the batched replay pre-pass; does not touch recency/frequency)."""
+        return np.fromiter(map(self.owner.__contains__, fps), dtype=bool, count=len(fps))
+
     def admit(self, stream: int, fp: int, pba: int) -> None:
         holder = self.owner.get(fp)
         if holder is not None:  # already cached (possibly by another stream)
@@ -336,7 +348,10 @@ class PrioritizedCache:
         self.owner[fp] = stream
         self.total += 1
         self.inserted += 1
-        self.segments.set_weight(stream, self._evict_priority(stream))
+        if len(sub) == 1:
+            # 0 -> 1: the stream just became evictable.  Otherwise its weight
+            # (1/LDSS, length-independent) is unchanged — skip the Fenwick walk.
+            self.segments.set_weight(stream, self._evict_priority(stream))
 
     def _evict(self) -> bool:
         victim_stream = self.segments.draw(self.rng)
@@ -353,7 +368,8 @@ class PrioritizedCache:
             return self._evict_fallback()
         self.owner.pop(out[0], None)
         self.total -= 1
-        self.segments.set_weight(victim_stream, self._evict_priority(victim_stream))
+        if len(sub) == 0:
+            self.segments.set_weight(victim_stream, 0.0)
         return True
 
     def _evict_fallback(self) -> bool:
@@ -362,7 +378,8 @@ class PrioritizedCache:
             if out is not None:
                 self.owner.pop(out[0], None)
                 self.total -= 1
-                self.segments.set_weight(s, self._evict_priority(s))
+                if len(sub) == 0:
+                    self.segments.set_weight(s, 0.0)
                 return True
         return False
 

@@ -43,9 +43,7 @@ class HybridReport:
     @property
     def avg_hits_of_cached_fingerprints(self) -> float:
         """Inline dedup hits per fingerprint admitted to the cache (Table IV)."""
-        inserted = getattr(self.inline, "_cache_inserted", None)
-        if inserted is None:
-            return 0.0
+        inserted = self.inline.cache_inserted
         return self.inline.inline_dups / inserted if inserted else 0.0
 
 
@@ -107,8 +105,20 @@ class HPDedup:
     def read(self, stream: int, lba: int) -> Optional[int]:
         return self.inline.on_read(stream, lba)
 
+    def write_batch(self, streams, lbas, fps) -> np.ndarray:
+        """Columnar write ingestion: equivalent to calling ``write`` once per
+        record, but with the vectorized batched pre-pass (see
+        ``core.batch_replay``).  Returns per-record inline-dedup flags."""
+        from .batch_replay import hpdedup_write_batch
+
+        return hpdedup_write_batch(self, streams, lbas, fps)
+
     def replay(self, trace: np.ndarray) -> "HPDedup":
-        """Replay a merged trace (TRACE_DTYPE records in timestamp order)."""
+        """Replay a merged trace (TRACE_DTYPE records in timestamp order).
+
+        This is the per-record reference path; ``replay_batched`` is the
+        fast columnar path and must produce an identical ``HybridReport``.
+        """
         assert trace.dtype == TRACE_DTYPE
         for rec in trace:
             if rec["op"] == OP_WRITE:
@@ -117,6 +127,12 @@ class HPDedup:
                 self.read(int(rec["stream"]), int(rec["lba"]))
         self.inline.flush()
         return self
+
+    def replay_batched(self, trace: np.ndarray, batch_size: int = 8192) -> "HPDedup":
+        """Columnar batched replay — same semantics as ``replay``."""
+        from .batch_replay import hpdedup_replay
+
+        return hpdedup_replay(self, trace, batch_size)
 
     # -- post-processing -----------------------------------------------------------
     def run_postprocess(self, to_exact: bool = False) -> None:
@@ -137,7 +153,7 @@ class HPDedup:
         if run_post_to_exact:
             self.run_postprocess(to_exact=True)
         m = self.inline.metrics
-        m._cache_inserted = self.inline.cache.inserted  # type: ignore[attr-defined]
+        m.cache_inserted = self.inline.cache.inserted
         return HybridReport(
             inline=m,
             post=self.post.metrics,

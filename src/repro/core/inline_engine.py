@@ -29,6 +29,7 @@ class InlineMetrics:
     inline_dups: int = 0          # duplicate writes eliminated inline
     cache_hits: int = 0           # fingerprint-cache hits (pre-threshold)
     broken_runs: int = 0          # dup runs below threshold -> written anyway
+    cache_inserted: int = 0       # fingerprints admitted to the cache (set at flush)
     per_stream_dups: Dict[int, int] = field(default_factory=dict)
     per_stream_writes: Dict[int, int] = field(default_factory=dict)
 

@@ -20,6 +20,24 @@ from typing import List, Optional
 
 import numpy as np
 
+_DRAWS_MATCH: Optional[bool] = None
+
+
+def _vectorized_draws_match() -> bool:
+    """True when ``Generator.integers(0, array_of_highs)`` consumes the bit
+    stream exactly like per-element scalar calls (it does on current numpy's
+    Lemire path).  Checked once at runtime so a future numpy algorithm change
+    degrades ``offer_many`` to the loop instead of silently diverging from
+    the scalar oracle."""
+    global _DRAWS_MATCH
+    if _DRAWS_MATCH is None:
+        r1, r2 = np.random.default_rng(12345), np.random.default_rng(12345)
+        highs = range(17, 117)
+        seq = [int(r1.integers(0, h)) for h in highs]
+        vec = r2.integers(0, np.asarray(highs)).tolist()
+        _DRAWS_MATCH = seq == vec
+    return _DRAWS_MATCH
+
 
 class Reservoir:
     """Online uniform sample of size ``k`` from an unbounded stream."""
@@ -40,6 +58,30 @@ class Reservoir:
             j = int(self.rng.integers(0, self.seen))
             if j < self.k:
                 self.buf[j] = item
+
+    def offer_many(self, items) -> None:
+        """Offer a sequence of items with bitwise-identical RNG decisions to
+        calling ``offer`` once per item (the batched replay path relies on
+        this for scalar/batched equivalence)."""
+        buf, k = self.buf, self.k
+        seen = self.seen
+        fill = min(max(k - len(buf), 0), len(items))
+        if fill:
+            buf.extend(items[:fill])
+            seen += fill
+        rest = items[fill:]
+        if rest:
+            m = len(rest)
+            if _vectorized_draws_match():
+                js = self.rng.integers(0, np.arange(seen + 1, seen + m + 1)).tolist()
+            else:
+                rng_integers = self.rng.integers
+                js = [int(rng_integers(0, seen + i)) for i in range(1, m + 1)]
+            seen += m
+            for j, item in zip(js, rest):
+                if j < k:
+                    buf[j] = item
+        self.seen = seen
 
     def sample(self) -> np.ndarray:
         return np.asarray(self.buf, dtype=np.uint64)

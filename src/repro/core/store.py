@@ -60,6 +60,21 @@ class BlockStore:
         self.live_blocks = 0
         self.peak_blocks = 0
         self.disk_writes = 0
+        # staged columnar write path (batched replay): see stage_new_block
+        self._staged_writes: List[Tuple[int, int]] = []  # (fp, pba)
+        self._staged_dups: List[int] = []  # pba
+        self._reverse_dirty = False
+        # per-stream LBA watermark: strict upper bound over every LBA this
+        # store has mapped (or that the batched driver has certified for
+        # staging).  Lets the driver prove key-freshness without probing
+        # lba_map per record.  Maintained by _map and _certify-time bulk
+        # updates; an over-approximation is always safe (it only forces the
+        # slow probe).
+        self._lba_watermark: Dict[int, int] = {}
+        # True once any PBA has ever been freed; until then a cached
+        # (fp, pba) pair can never go stale, so run decisions may skip the
+        # TOCTOU revalidation.
+        self._ever_freed = False
 
     # -- write path ------------------------------------------------------------
     def write_new_block(self, stream: int, lba: int, fp: int) -> int:
@@ -81,17 +96,98 @@ class BlockStore:
         self._map(stream, lba, pba)
         self.buffer.access(pba)
 
+    # -- staged columnar write path (batched replay) ---------------------------
+    #
+    # The batched driver proves per sub-batch that no (stream, LBA) key is
+    # overwritten (vectorized collision check), which means no refcount can
+    # drop and no PBA can be freed mid-batch.  Under that guarantee the write
+    # path splits into an *eager* part that later records in the same batch
+    # may read (``lba_map`` for reads, ``fp_of_pba`` for the run-decision
+    # TOCTOU guard) and a *deferred* part (``fp_table``/``refcount``/capacity
+    # counters) applied in one pass by ``flush_staged`` before any external
+    # observer (post-processing, reports) can look.  The reverse LBA index is
+    # rebuilt lazily from ``lba_map`` the next time remapping needs it, and
+    # the D-LRU buffer — whose state feeds no report — is modeled only on the
+    # per-record path.
+
+    def stage_new_block(self, stream: int, lba: int, fp: int) -> int:
+        """Batched-path ``write_new_block``; caller guarantees (stream, lba)
+        is not currently mapped."""
+        pba = self._next_pba
+        self._next_pba += 1
+        self.fp_of_pba[pba] = fp
+        self.lba_map[(stream, lba)] = pba
+        self._staged_writes.append((fp, pba))
+        return pba
+
+    def stage_duplicate(self, stream: int, lba: int, pba: int) -> None:
+        """Batched-path ``map_duplicate``; same no-overwrite precondition."""
+        self.lba_map[(stream, lba)] = pba
+        self._staged_dups.append(pba)
+
+    def flush_staged(self) -> None:
+        """Apply deferred accounting for staged writes in one columnar pass."""
+        sw, sd = self._staged_writes, self._staged_dups
+        if not sw and not sd:
+            return
+        if sw:
+            ft = self.fp_table
+            ft_get = ft.get
+            for fp, pba in sw:
+                lst = ft_get(fp)
+                if lst is None:
+                    ft[fp] = [pba]
+                else:
+                    lst.append(pba)
+            # fresh PBAs start at refcount 1 (the write's own LBA mapping)
+            self.refcount.update(dict.fromkeys([p for _, p in sw], 1))
+            self.live_blocks += len(sw)
+            self.peak_blocks = max(self.peak_blocks, self.live_blocks)
+            self.disk_writes += len(sw)
+        if sd:
+            rc = self.refcount
+            rc_get = rc.get
+            for pba in sd:
+                # .get: a baseline without the TOCTOU guard (DIODE) may remap
+                # to a PBA freed in an earlier batch, like scalar _map does
+                rc[pba] = rc_get(pba, 0) + 1
+        self._reverse_dirty = True
+        sw.clear()
+        sd.clear()
+
+    def _ensure_reverse(self) -> None:
+        """Rebuild the PBA -> LBA-keys reverse index after staged writes."""
+        if not self._reverse_dirty:
+            return
+        rev: Dict[int, set] = {}
+        for key, pba in self.lba_map.items():
+            s = rev.get(pba)
+            if s is None:
+                rev[pba] = {key}
+            else:
+                s.add(key)
+        self.lbas_of_pba = rev
+        self._reverse_dirty = False
+
     def _map(self, stream: int, lba: int, pba: int) -> None:
         key = (stream, lba)
         old = self.lba_map.get(key)
         if old == pba:
             return
         if old is not None:
+            # overwrite: the reverse index is about to be read/mutated, so a
+            # stale (post-staged-write) index must be rebuilt first.  Fresh
+            # mappings never read it — eager adds to a stale index are
+            # discarded by the next rebuild.
+            if self._reverse_dirty:
+                self._ensure_reverse()
             self.lbas_of_pba.get(old, set()).discard(key)
             self._unref(old)
         self.lba_map[key] = pba
         self.lbas_of_pba.setdefault(pba, set()).add(key)
         self.refcount[pba] = self.refcount.get(pba, 0) + 1
+        if lba >= self._lba_watermark.get(stream, 0):
+            self._lba_watermark[stream] = lba + 1
 
     def _unref(self, pba: int) -> None:
         rc = self.refcount.get(pba, 0) - 1
@@ -100,6 +196,7 @@ class BlockStore:
             self._free(pba)
 
     def _free(self, pba: int) -> None:
+        self._ever_freed = True
         fp = self.fp_of_pba.pop(pba, None)
         if fp is not None:
             lst = self.fp_table.get(fp)
@@ -135,6 +232,7 @@ class BlockStore:
         pbas = self.fp_table.get(fp, [])
         if len(pbas) <= 1:
             return 0
+        self._ensure_reverse()
         canonical, extras = pbas[0], list(pbas[1:])
         canon_keys = self.lbas_of_pba.setdefault(canonical, set())
         reclaimed = 0
@@ -160,6 +258,8 @@ class BlockStore:
 
     def check_consistency(self) -> None:
         """Raise AssertionError if internal tables disagree."""
+        assert not self._staged_writes and not self._staged_dups, "unflushed staged writes"
+        self._ensure_reverse()
         live = set()
         for fp, pbas in self.fp_table.items():
             assert len(pbas) == len(set(pbas)), f"dup PBAs for fp {fp}"

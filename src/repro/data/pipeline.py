@@ -161,19 +161,35 @@ class DedupIngestPipeline:
         return [(tenants[i], blocks[i], int(fps[i])) for i in range(len(blocks))]
 
     def _refill(self) -> None:
-        """Ingest one fingerprint batch; admitted tokens join the flat FIFO."""
-        for tid, block, fp in self._ingest_chunk():
-            self.metrics.blocks_in += 1
+        """Ingest one fingerprint batch; admitted tokens join the flat FIFO.
+
+        The whole chunk flows through the engine's columnar ``write_batch``
+        (Engine protocol) — one batched cache/estimator pre-pass instead of
+        one Python call chain per block.
+        """
+        chunk = self._ingest_chunk()
+        tenants = np.empty(len(chunk), dtype=np.int64)
+        lbas = np.empty(len(chunk), dtype=np.int64)
+        fps = np.empty(len(chunk), dtype=np.uint64)
+        for i, (tid, _, fp) in enumerate(chunk):
+            tenants[i] = tid
             lba = self._lba.get(tid, 0)
             self._lba[tid] = lba + 1
-            deduped = self.engine.write(tid, lba, fp)
+            lbas[i] = lba
+            fps[i] = fp
+        flags = self.engine.write_batch(tenants, lbas, fps)
+        self.metrics.blocks_in += len(chunk)
+        admitted_blocks = []
+        for (tid, block, fp), deduped in zip(chunk, flags.tolist()):
             if deduped:
                 self.metrics.blocks_deduped_inline += 1
                 continue
             if fp not in self.block_content:
                 self.block_content[fp] = block
             self.metrics.blocks_admitted += 1
-            self._fifo = np.concatenate([self._fifo, block])
+            admitted_blocks.append(block)
+        if admitted_blocks:
+            self._fifo = np.concatenate([self._fifo, *admitted_blocks])
 
     def next_batch(self, batch_size: int, seq_len: int) -> Dict[str, np.ndarray]:
         need = batch_size * (seq_len + 1)

@@ -38,6 +38,39 @@ def chain_fingerprint(prev_fp: int, tokens: np.ndarray) -> int:
     return int(fingerprint_ints(words[None, :])[0])
 
 
+_M64 = 0xFFFFFFFFFFFFFFFF
+
+
+def _mix64(a: int, b: int) -> int:
+    """SplitMix64-style combiner for host-side fingerprint chaining."""
+    x = (a * 0x9E3779B97F4A7C15 + b) & _M64
+    x ^= x >> 30
+    x = (x * 0xBF58476D1CE4E5B9) & _M64
+    x ^= x >> 27
+    x = (x * 0x94D049BB133111EB) & _M64
+    x ^= x >> 31
+    return x or 1  # 0 is reserved
+
+
+def chain_fingerprints_batched(prev_fp: int, blocks: np.ndarray) -> List[int]:
+    """Prefix-chained fingerprints for a whole request in ONE device call.
+
+    Content hashes for all blocks are computed by a single batched
+    ``fingerprint_ints`` kernel launch; the (inherently sequential) chaining
+    folds them on the host with a 64-bit mixer.  Equal prefixes still imply
+    equal fingerprints — the exactness condition prefix caching needs.
+    """
+    if len(blocks) == 0:
+        return []
+    content = fingerprint_ints(np.asarray(blocks, dtype=np.int32))
+    fps = []
+    fp = prev_fp
+    for h in content.tolist():
+        fp = _mix64(fp, h)
+        fps.append(fp)
+    return fps
+
+
 def _slot_slice(cache, start: int, length: int):
     """Slice ``length`` KV slots starting at ``start`` (axis -3 of KV leaves)."""
     def f(leaf):
@@ -117,26 +150,36 @@ class DedupKVServer:
         return cache
 
     def prefill_request(self, tenant: int, tokens: np.ndarray) -> Tuple[Any, int, Dict]:
-        """Prefill with block-level dedup; returns (cache, position, info)."""
+        """Prefill with block-level dedup; returns (cache, position, info).
+
+        The whole request's block fingerprints come from one batched kernel
+        launch, and the dedup bookkeeping flows through the engine's
+        columnar ``write_batch`` (Engine protocol) instead of one inline
+        call chain per block.
+        """
         req = self._request_counter
         self._request_counter += 1
         pt = self.page_tokens
         nblocks = len(tokens) // pt
         cache = self.model.init_cache(1, self.max_slots)
         pos = 0
-        fp = 0
         info = {"hit_blocks": 0, "blocks": nblocks}
-        for i in range(nblocks):
-            blk = np.asarray(tokens[i * pt : (i + 1) * pt])
-            fp = chain_fingerprint(fp, blk)
-            self.metrics.blocks_total += 1
-            self.metrics.pages_logical += 1
-            lba = (req << 24) | i
-            store = self.dedup.store
-            # inline lookup via the prioritized cache
-            pba = self.dedup.inline.cache.lookup(tenant, fp)
-            self.dedup.inline.on_write(tenant, lba, fp)
+        blocks = [np.asarray(tokens[i * pt : (i + 1) * pt]) for i in range(nblocks)]
+        fps = chain_fingerprints_batched(0, np.stack(blocks)) if blocks else []
+        lbas = [(req << 24) | i for i in range(nblocks)]
+        store = self.dedup.store
+        # probe cached PBAs first (prefix fps are unique within a request,
+        # so probes are independent of this request's own writes)...
+        lookup = self.dedup.inline.cache.lookup
+        pbas = [lookup(tenant, fp) for fp in fps]
+        # ...then push the whole request through the batched write path
+        if nblocks:
+            self.dedup.write_batch(np.full(nblocks, tenant, dtype=np.int64), lbas, fps)
             self.dedup.inline.flush_stream(tenant)
+        self.metrics.blocks_total += nblocks
+        self.metrics.pages_logical += nblocks
+        for i, blk in enumerate(blocks):
+            pba = pbas[i]
             if pba is not None and pba in self.pages:
                 cache = _slot_assign(cache, self.pages[pba], pos)
                 self.metrics.blocks_prefill_skipped += 1
@@ -145,7 +188,7 @@ class DedupKVServer:
             else:
                 cache = self._compute_page(cache, blk, pos)
                 page = _slot_slice(cache, pos, pt)
-                new_pba = store.lba_map.get((tenant, lba))
+                new_pba = store.lba_map.get((tenant, lbas[i]))
                 if new_pba is not None and new_pba not in self.pages:
                     self.pages[new_pba] = page
                     self.metrics.pages_allocated += 1

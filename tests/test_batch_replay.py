@@ -1,0 +1,177 @@
+"""Batched-vs-scalar replay equivalence: the columnar engine's core contract.
+
+The scalar per-record path (``replay``) is the reference oracle; the
+columnar batched path (``replay_batched`` / ``write_batch``) must produce a
+bit-identical ``HybridReport`` — inline dups, cache hits, broken runs,
+per-stream dicts, peak/final disk blocks, unique fingerprints — across
+workload templates, batch sizes (including 1 and whole-trace), engine
+configurations, read/write interleavings, and LBA-overwrite patterns (which
+force the staged store path to fall back to per-record application).
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    DIODE,
+    Engine,
+    HPDedup,
+    PurePostProcessing,
+    ReplayBatch,
+    generate_workload,
+    make_idedup,
+    run_replay,
+)
+from repro.core.fingerprint import OP_READ, OP_WRITE, TRACE_DTYPE
+
+BATCH_SIZES = [1, 7, 256, None]  # None = whole trace
+
+
+def _assert_equal_reports(factory, trace, batch_size):
+    bs = len(trace) if batch_size is None else batch_size
+    scalar = factory()
+    scalar.replay(trace)
+    ra = scalar.finish()
+    batched = factory()
+    batched.replay_batched(trace, batch_size=bs)
+    rb = batched.finish()
+    assert ra == rb
+    batched.store.check_consistency()
+
+
+@pytest.fixture(scope="module")
+def workload_b():
+    return generate_workload("B", total_requests=12_000, seed=5)
+
+
+@pytest.mark.parametrize("tpl", ["mail", "ftp", "web", "home"])
+def test_equivalence_per_template(tpl):
+    trace, _ = generate_workload("A", total_requests=6_000, seed=3, mix={tpl: 3})
+    _assert_equal_reports(lambda: HPDedup(cache_entries=512), trace, 256)
+
+
+@pytest.mark.parametrize("batch_size", BATCH_SIZES)
+def test_equivalence_batch_sizes(workload_b, batch_size):
+    trace, _ = workload_b
+    _assert_equal_reports(lambda: HPDedup(cache_entries=512), trace, batch_size)
+
+
+@pytest.mark.parametrize("batch_size", [7, 256])
+def test_equivalence_with_postprocess_period(workload_b, batch_size):
+    trace, _ = workload_b
+    _assert_equal_reports(
+        lambda: HPDedup(cache_entries=512, postprocess_period=2500), trace, batch_size
+    )
+
+
+@pytest.mark.parametrize(
+    "factory_name,factory",
+    [
+        ("idedup", lambda _s: make_idedup(cache_entries=512)),
+        ("hp-lfu", lambda _s: HPDedup(cache_entries=512, policy="lfu")),
+        ("hp-arc", lambda _s: HPDedup(cache_entries=512, policy="arc")),
+        ("hp-fixed-threshold", lambda _s: HPDedup(
+            cache_entries=512, adaptive_threshold=False, fixed_threshold=4)),
+        ("hp-rs-only", lambda _s: HPDedup(cache_entries=512, use_unseen=False)),
+        ("diode", lambda s: DIODE(cache_entries=512, stream_templates=s)),
+        ("postproc", lambda _s: PurePostProcessing()),
+    ],
+)
+def test_equivalence_engine_configs(workload_b, factory_name, factory):
+    trace, stream_of = workload_b
+    _assert_equal_reports(lambda: factory(stream_of), trace, 256)
+
+
+def test_equivalence_overwrite_heavy_interleaving():
+    """Random LBA overwrites + interleaved reads force the staged store
+    path's fallback; frees and TOCTOU-stale pending runs must still match."""
+    rng = np.random.default_rng(0)
+    n = 6_000
+    recs = np.zeros(n, dtype=TRACE_DTYPE)
+    recs["ts"] = np.arange(n)
+    recs["stream"] = rng.integers(0, 3, n)
+    recs["op"] = np.where(rng.random(n) < 0.8, OP_WRITE, OP_READ)
+    recs["lba"] = rng.integers(0, 40, n)
+    recs["fp"] = rng.integers(1, 50, n)
+    for bs in (1, 7, 256, None):
+        _assert_equal_reports(lambda: HPDedup(cache_entries=64), recs, bs)
+        _assert_equal_reports(lambda: DIODE(cache_entries=64), recs, bs)
+        _assert_equal_reports(lambda: PurePostProcessing(), recs, bs)
+
+
+def test_write_batch_streaming_matches_scalar_writes(workload_b):
+    """Streaming ``write_batch`` chunks == per-record ``write`` calls."""
+    trace, _ = workload_b
+    writes = trace[trace["op"] == OP_WRITE][:4_000]
+
+    scalar = HPDedup(cache_entries=512, postprocess_period=1_000)
+    scalar_flags = [
+        scalar.write(int(r["stream"]), int(r["lba"]), int(r["fp"])) for r in writes
+    ]
+    batched = HPDedup(cache_entries=512, postprocess_period=1_000)
+    batched_flags = []
+    for a in range(0, len(writes), 333):
+        chunk = writes[a : a + 333]
+        flags = batched.write_batch(chunk["stream"], chunk["lba"], chunk["fp"])
+        batched_flags.extend(flags.tolist())
+    assert scalar_flags == batched_flags
+    assert scalar.finish() == batched.finish()
+
+
+def test_engine_protocol_conformance(workload_b):
+    trace, stream_of = workload_b
+    engines = [
+        HPDedup(cache_entries=256),
+        make_idedup(cache_entries=256),
+        DIODE(cache_entries=256, stream_templates=stream_of),
+        PurePostProcessing(),
+    ]
+    for engine in engines:
+        assert isinstance(engine, Engine)
+        run_replay(engine, trace[:2_000])
+        rep = engine.finish()
+        assert rep.total_writes > 0
+
+
+def test_replay_batch_columnar_view(workload_b):
+    trace, _ = workload_b
+    rb = ReplayBatch.from_trace(trace)
+    assert len(rb) == len(trace)
+    w = rb.write_positions()
+    assert w is not None
+    np.testing.assert_array_equal(w, np.nonzero(trace["op"] == OP_WRITE)[0])
+    part = rb.slice(10, 20)
+    assert len(part) == 10
+    np.testing.assert_array_equal(part.fp, trace["fp"][10:20])
+    # write-only batches have no op column: every record is a write
+    wb = ReplayBatch(trace["stream"][:5], trace["lba"][:5], trace["fp"][:5])
+    assert wb.write_positions() is None
+
+
+def test_reservoir_offer_many_matches_offer():
+    from repro.core.reservoir import Reservoir
+
+    r1 = Reservoir(16, seed=9)
+    r2 = Reservoir(16, seed=9)
+    items = list(range(1, 500))
+    for x in items:
+        r1.offer(x)
+    # offer in uneven chunks: fill phase, partial chunks, single items
+    r2.offer_many(items[:10])
+    r2.offer_many(items[10:11])
+    r2.offer_many(items[11:300])
+    r2.offer_many([])
+    r2.offer_many(items[300:])
+    assert r1.buf == r2.buf and r1.seen == r2.seen
+
+
+def test_cache_inserted_is_real_field(workload_b):
+    trace, _ = workload_b
+    hp = HPDedup(cache_entries=256)
+    run_replay(hp, trace[:3_000])
+    rep = hp.finish()
+    assert rep.inline.cache_inserted == hp.inline.cache.inserted
+    assert rep.inline.cache_inserted > 0
+    assert rep.avg_hits_of_cached_fingerprints == (
+        rep.inline.inline_dups / rep.inline.cache_inserted
+    )

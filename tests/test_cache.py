@@ -1,6 +1,9 @@
 """Cache policies + the LDSS-prioritized cache (paper SIV-B)."""
 
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core.cache import ARCCache, GlobalCache, LFUCache, LRUCache, PrioritizedCache

@@ -4,6 +4,8 @@ independent numpy golden model (interpret mode on CPU)."""
 import jax.numpy as jnp
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core.ffh import ffh_from_counts

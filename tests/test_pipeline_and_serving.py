@@ -56,6 +56,26 @@ def test_chain_fingerprint_prefix_property():
     assert a != c
 
 
+def test_chain_fingerprints_batched_prefix_property():
+    """The production chain (one batched kernel launch + host fold) must
+    uphold the same invariant: equal prefixes <=> equal fingerprints."""
+    from repro.serving.dedup_kv import chain_fingerprints_batched
+
+    t1 = np.arange(16, dtype=np.int32)
+    t2 = np.arange(16, 32, dtype=np.int32)
+    t3 = np.arange(32, 48, dtype=np.int32)
+    a = chain_fingerprints_batched(0, np.stack([t1, t2, t3]))
+    b = chain_fingerprints_batched(0, np.stack([t1, t2, t3]))
+    assert a == b and len(a) == 3
+    # shared prefix [t1] -> same first fp; divergence at block 2 cascades
+    c = chain_fingerprints_batched(0, np.stack([t1, t3, t3]))
+    assert c[0] == a[0] and c[1] != a[1] and c[2] != a[2]
+    # different first block -> different everywhere
+    d = chain_fingerprints_batched(0, np.stack([t2, t2, t3]))
+    assert d[0] != a[0]
+    assert all(fp != 0 for fp in a + c + d)  # 0 is reserved
+
+
 def test_serving_dedup_exact_and_saving():
     cfg = get_config("tinyllama-1.1b", smoke=True)
     model = build_model(cfg)

@@ -1,6 +1,9 @@
 """Reservoir sampling uniformity + FFH correctness."""
 
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core.ffh import distinct_of_ffh, ffh_from_counts, occurrence_counts, sample_size_of_ffh

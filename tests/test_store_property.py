@@ -1,6 +1,9 @@
 """Property tests: block-store invariants + hybrid dedup exactness."""
 
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core.store import BlockStore
