@@ -1,0 +1,231 @@
+"""Shard-scaling benchmark: ShardedCluster vs the single-engine batched path.
+
+Replays the synthetic workloads through ``ShardedCluster`` at several shard
+counts and under both routing policies — ``fingerprint`` (consistent-hash
+content partitioning: exact global dedup, but a stream's LBA-sequential
+duplicate runs fragment across shards, which costs the inline phase run
+decisions and broken-run writes) and ``stream`` (affinity placement: runs
+stay intact and per-shard throughput beats the single engine, but
+cross-shard content duplicates stay unmerged) — and through a single
+batched engine.  For fingerprint routing it cross-checks the cluster's
+aggregate dedup counts against the single-engine oracle:
+
+* ``total_writes`` / ``total_dup_writes`` — fingerprint routing confines
+  each fingerprint to one shard, so per-shard ground-truth accounting sums
+  to the global value,
+* ``unique_fingerprints`` / ``final_disk_blocks`` — the shard-local exact
+  phase restores one block per live fingerprint per partition,
+* conservation: inline dups + post-process reclaims == total duplicate
+  writes on both sides.
+
+Emits ``BENCH_cluster.json``:
+
+    {"meta": {...}, "rows": [
+        {"workload": "A", "shards": 4, "requests": ...,
+         "single_rps": ..., "serial_rps": ..., "pershard_rps": ...,
+         "parallel_model_rps": ..., "pershard_ratio": ...,
+         "counts_equal": true}, ...]}
+
+Three throughput views per row: ``serial_rps`` is the in-process wall
+number (shards run one after another here); ``pershard_rps`` is the
+batched per-shard ingest rate (requests / summed shard ingest time —
+coordinator route/scatter excluded); ``parallel_model_rps`` models a real
+cluster (route + scatter + the slowest shard).  ``pershard_ratio`` is
+per-shard throughput over the single-engine batched path.
+
+The throughput bar: for every workload x shard count, the *better routing
+policy* must keep ``pershard_ratio >= 0.8`` — sharding must offer a
+placement within 20% of PR 1's batched path.  Stream affinity clears it
+(runs stay intact); fingerprint routing may fall below on run-heavy
+workloads (the documented fragmentation tax buys exact global dedup).
+Full runs exit nonzero when the bar or the count cross-checks fail;
+``--smoke`` gates only the counts (1-rep timings on shared CI runners
+are noise).
+
+Usage:
+    python benchmarks/cluster_scaling.py            # default scale
+    python benchmarks/cluster_scaling.py --smoke    # CI-sized
+    python benchmarks/cluster_scaling.py --shards 1 2 4 8 16
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+from typing import Callable, List
+
+sys.path.insert(0, os.path.join(os.path.dirname(os.path.abspath(__file__)), "..", "src"))
+
+from repro.core import HPDedup, ShardedCluster, generate_workload
+from repro.core.batch_replay import DEFAULT_BATCH_SIZE
+
+
+def _time_best(fn: Callable[[], object], reps: int) -> float:
+    best = float("inf")
+    for _ in range(reps):
+        t0 = time.process_time()
+        fn()
+        best = min(best, time.process_time() - t0)
+    return best
+
+
+def counts_equal(cluster_rep, oracle_rep) -> bool:
+    return (
+        cluster_rep.total_writes == oracle_rep.total_writes
+        and cluster_rep.total_dup_writes == oracle_rep.total_dup_writes
+        and cluster_rep.unique_fingerprints == oracle_rep.unique_fingerprints
+        and cluster_rep.final_disk_blocks == oracle_rep.final_disk_blocks
+        and cluster_rep.inline.inline_dups + cluster_rep.post.blocks_reclaimed
+        == cluster_rep.total_dup_writes
+        and oracle_rep.inline.inline_dups + oracle_rep.post.blocks_reclaimed
+        == oracle_rep.total_dup_writes
+    )
+
+
+def bench(
+    workloads: List[str],
+    n_requests: int,
+    cache_entries: int,
+    batch_size: int,
+    reps: int,
+    shard_counts: List[int],
+) -> List[dict]:
+    rows = []
+    for wl in workloads:
+        trace, _ = generate_workload(wl, total_requests=n_requests, seed=0)
+        n = len(trace)
+
+        def single() -> HPDedup:
+            return HPDedup(cache_entries=cache_entries)
+
+        t_single = _time_best(
+            lambda: single().replay_batched(trace, batch_size=batch_size), reps
+        )
+        single_rps = n / t_single
+        oracle_rep = single().replay_batched(trace, batch_size=batch_size).finish()
+
+        for shards, routing in [(s, r) for s in shard_counts for r in ("fingerprint", "stream")]:
+            def cluster() -> ShardedCluster:
+                # every shard node brings its own cache (per-node resources
+                # are constant as the cluster grows)
+                return ShardedCluster(
+                    num_shards=shards, cache_entries=cache_entries, routing=routing
+                )
+
+            t_serial = _time_best(
+                lambda: cluster().replay_batched(trace, batch_size=batch_size), reps
+            )
+            # phase breakdown: coordinator (route+scatter) vs per-shard ingest;
+            # shards run serially in-process but concurrently on a real cluster
+            best_pershard, best_parallel, timing = float("inf"), float("inf"), None
+            for _ in range(reps):
+                t = cluster().replay_batched_timed(trace, batch_size=batch_size)
+                pershard = sum(t["shard_times"])
+                parallel = t["route"] + t["scatter"] + max(t["shard_times"])
+                if pershard < best_pershard:
+                    best_pershard, timing = pershard, t
+                best_parallel = min(best_parallel, parallel)
+            c = cluster().replay_batched(trace, batch_size=batch_size)
+            rep = c.finish()
+            c.check_consistency()
+            if routing == "fingerprint":
+                # fingerprint partitioning: aggregate counts must equal the
+                # single-engine oracle's
+                equal = counts_equal(rep, oracle_rep)
+            else:
+                # stream affinity: per-shard exactness only — check the
+                # cluster-internal conservation invariant instead
+                equal = (
+                    rep.total_writes == oracle_rep.total_writes
+                    and rep.inline.inline_dups + rep.post.blocks_reclaimed
+                    == rep.total_dup_writes
+                    and rep.final_disk_blocks == rep.unique_fingerprints
+                )
+            row = {
+                "workload": wl,
+                "shards": shards,
+                "routing": routing,
+                "requests": n,
+                "single_rps": round(single_rps),
+                "serial_rps": round(n / t_serial),
+                "pershard_rps": round(n / best_pershard),
+                "parallel_model_rps": round(n / best_parallel),
+                "route_s": round(timing["route"], 4),
+                "scatter_s": round(timing["scatter"], 4),
+                "pershard_ratio": round(t_single / best_pershard, 3),
+                "counts_equal": equal,
+            }
+            rows.append(row)
+            print(
+                f"{wl} shards={shards:<2d} {routing:11s} per-shard {row['pershard_rps']:>9,d} rps   "
+                f"serial {row['serial_rps']:>9,d} rps   parallel-model "
+                f"{row['parallel_model_rps']:>9,d} rps   single {row['single_rps']:>9,d} rps   "
+                f"pershard_ratio {row['pershard_ratio']:.3f}   "
+                f"counts_equal={row['counts_equal']}"
+            )
+    return rows
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true", help="CI-sized quick run")
+    ap.add_argument("--requests", type=int, default=200_000)
+    ap.add_argument("--cache-entries", type=int, default=32_768)
+    ap.add_argument("--batch-size", type=int, default=DEFAULT_BATCH_SIZE)
+    ap.add_argument("--reps", type=int, default=3)
+    ap.add_argument("--workloads", nargs="+", default=["A", "B", "C"])
+    ap.add_argument("--shards", type=int, nargs="+", default=[1, 2, 4, 8])
+    ap.add_argument("--out", default="BENCH_cluster.json")
+    args = ap.parse_args()
+    if args.smoke:
+        args.requests = min(args.requests, 30_000)
+        args.workloads = args.workloads[:1]
+        args.shards = [1, 4]
+        args.reps = 1
+
+    rows = bench(
+        args.workloads, args.requests, args.cache_entries, args.batch_size, args.reps,
+        args.shards,
+    )
+    by_key = {}
+    for r in rows:
+        by_key.setdefault(f"{r['routing']}/{r['shards']}", []).append(r["pershard_ratio"])
+    summary = {k: round(sum(v) / len(v), 3) for k, v in sorted(by_key.items())}
+    payload = {
+        "meta": {
+            "requests": args.requests,
+            "cache_entries": args.cache_entries,
+            "batch_size": args.batch_size,
+            "reps": args.reps,
+            "workloads": args.workloads,
+            "shards": args.shards,
+            "mean_pershard_ratio_by_shards": summary,
+        },
+        "rows": rows,
+    }
+    with open(args.out, "w") as f:
+        json.dump(payload, f, indent=2)
+    print(f"\nmean per-shard/single throughput ratio by shard count: {summary}")
+    print(f"wrote {args.out}")
+    if not all(r["counts_equal"] for r in rows):
+        print("ERROR: cluster aggregate dedup counts diverged from the single-engine oracle")
+        return 1
+    if not args.smoke:
+        # throughput bar: the better routing policy per (workload, shards)
+        # must stay within 20% of the single-engine batched path
+        best = {}
+        for r in rows:
+            key = (r["workload"], r["shards"])
+            best[key] = max(best.get(key, 0.0), r["pershard_ratio"])
+        below = {k: v for k, v in best.items() if v < 0.8}
+        if below:
+            print(f"ERROR: per-shard throughput bar (>= 0.8) missed: {below}")
+            return 1
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

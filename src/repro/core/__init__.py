@@ -5,6 +5,8 @@ Public surface:
 * ``Engine`` — the protocol every dedup engine implements; ``run_replay``
   drives any engine, batched or scalar, over a merged trace.
 * ``HPDedup`` / ``HybridReport`` — the hybrid prioritized dedup mechanism.
+* ``ShardedCluster`` — consistent-hash fingerprint partitioning across N
+  per-shard engines, same ``Engine`` protocol (``core.cluster``).
 * ``ReplayBatch`` — columnar batched ingestion (``core.batch_replay``).
 * ``StreamLocalityEstimator`` — reservoir + unseen-estimator LDSS tracking.
 * ``PrioritizedCache`` / ``GlobalCache`` — fingerprint caches.
@@ -21,6 +23,7 @@ import numpy as np
 from .baselines import DIODE, PurePostProcessing, make_idedup
 from .batch_replay import DEFAULT_BATCH_SIZE, ReplayBatch, run_replay
 from .cache import ARCCache, GlobalCache, LFUCache, LRUCache, PrioritizedCache
+from .cluster import ConsistentHashRing, ShardedCluster, aggregate_reports
 from .ffh import ffh_from_counts, ffh_from_sample, occurrence_counts
 from .fingerprint import OP_READ, OP_WRITE, TRACE_DTYPE, host_fingerprint
 from .hybrid import HPDedup, HybridReport
@@ -70,6 +73,9 @@ class Engine(Protocol):
 
 __all__ = [
     "Engine",
+    "ShardedCluster",
+    "ConsistentHashRing",
+    "aggregate_reports",
     "ReplayBatch",
     "run_replay",
     "DEFAULT_BATCH_SIZE",

@@ -109,6 +109,41 @@ class ReplayBatch:
             return None
         return np.nonzero(self.op == OP_WRITE)[0]
 
+    def scatter(self, shard_ids: np.ndarray, num_shards: int):
+        """Split into per-shard sub-batches in one vectorized pass.
+
+        One stable argsort groups records by shard while preserving each
+        shard's record order; every column is gathered once and sliced per
+        shard.  Returns ``(parts, order)``: ``parts[s]`` is shard ``s``'s
+        sub-batch (``None`` when empty) and ``order`` maps concatenated
+        per-part positions back to original record indices, so per-record
+        outputs realign with ``out[order] = np.concatenate(part_outputs)``.
+        """
+        order = np.argsort(shard_ids, kind="stable")
+        counts = np.bincount(shard_ids, minlength=num_shards)
+        stream = self.stream[order]
+        lba = self.lba[order]
+        fp = self.fp[order]
+        op = None if self.op is None else self.op[order]
+        ts = None if self.ts is None else self.ts[order]
+        parts = []
+        a = 0
+        for c in counts.tolist():
+            b = a + c
+            parts.append(
+                None
+                if c == 0
+                else ReplayBatch(
+                    stream[a:b],
+                    lba[a:b],
+                    fp[a:b],
+                    op=None if op is None else op[a:b],
+                    ts=None if ts is None else ts[a:b],
+                )
+            )
+            a = b
+        return parts, order
+
 
 def run_replay(engine, trace: np.ndarray, batched: bool = True,
                batch_size: int = DEFAULT_BATCH_SIZE):
@@ -116,6 +151,58 @@ def run_replay(engine, trace: np.ndarray, batched: bool = True,
     if batched and hasattr(engine, "replay_batched"):
         return engine.replay_batched(trace, batch_size=batch_size)
     return engine.replay(trace)
+
+
+def engine_run_batch(engine, rb: ReplayBatch, out: Optional[np.ndarray] = None) -> None:
+    """One batched ingest step for any engine, WITHOUT the end-of-replay
+    flush — the cluster driver feeds a shard many sub-batches and must not
+    close pending duplicate runs at chunk boundaries (the scalar oracle only
+    flushes once, at the end of the whole replay).
+
+    The built-in engines dispatch to their non-flushing columnar drivers.
+    Other ``Engine`` implementations fall back to their own protocol
+    surface — ``write_batch`` for write-only batches, ``replay`` over the
+    reconstructed records otherwise — so any protocol-conformant engine
+    works as a cluster shard (flush timing inside the fallback is then the
+    engine's own business).
+    """
+    from .baselines import DIODE, PurePostProcessing
+    from .hybrid import HPDedup
+
+    if isinstance(engine, HPDedup):
+        hpdedup_run(engine, rb, out)
+    elif isinstance(engine, DIODE):
+        _diode_bulk(engine, rb, out, 0)
+    elif isinstance(engine, PurePostProcessing):
+        _postproc_bulk(engine, rb)
+    elif rb.op is None:
+        flags = engine.write_batch(rb.stream, rb.lba, rb.fp)
+        if out is not None:
+            out[: len(rb)] = flags
+    else:
+        recs = np.zeros(len(rb), dtype=TRACE_DTYPE)
+        recs["stream"] = rb.stream
+        recs["op"] = rb.op
+        recs["lba"] = rb.lba
+        recs["fp"] = rb.fp
+        if rb.ts is not None:
+            recs["ts"] = rb.ts
+        engine.replay(recs)
+
+
+def engine_finish_replay(engine) -> None:
+    """The per-engine end-of-replay flush matching ``engine_run_batch``.
+
+    Unknown engines are a no-op: their ``write_batch``/``replay`` fallback
+    owns its flush timing."""
+    from .baselines import DIODE, PurePostProcessing
+    from .hybrid import HPDedup
+
+    if isinstance(engine, HPDedup):
+        engine.inline.flush()
+    elif isinstance(engine, DIODE):
+        engine._flush_run()
+        engine.store.flush_staged()
 
 
 # ---------------------------------------------------------------------------

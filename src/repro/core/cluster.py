@@ -1,0 +1,405 @@
+"""Sharded dedup cluster: consistent-hash fingerprint partitioning (DESIGN §3).
+
+Scales the single-node engine toward the ROADMAP's production cluster the
+way CASStor partitions its block store: every record is routed to one of N
+*shards* — each a complete, independent ``Engine`` (fingerprint cache, LDSS
+estimator, spatial thresholds, ``BlockStore``) — by **consistent hashing on
+the content fingerprint**.  Because a given fingerprint always lands on the
+same shard, per-shard seen-sets/fingerprint tables partition the global
+fingerprint space exactly: aggregate duplicate counts, unique-fingerprint
+counts and the post-exactness invariant (one block per live fingerprint)
+all match a single monolithic engine, while the cache/estimator/store state
+per shard stays small enough to serve heavy multi-tenant traffic.
+
+``ShardedCluster`` implements the same ``Engine`` protocol as the engines
+it wraps (``write_batch`` / ``replay`` / ``finish``), so the data pipeline,
+the serving layer and every benchmark can swap a single engine for a
+cluster without code changes:
+
+* **Routing** — ``routing="fingerprint"`` (default) consistent-hashes the
+  fingerprint; ``routing="stream"`` pins whole streams to shards (FASTEN's
+  stream-affinity placement: better locality per shard, but cross-shard
+  duplicates stay unmerged — per-shard exactness only).
+* **Batched scatter** — ``replay_batched`` reuses the columnar
+  ``ReplayBatch`` machinery: shard ids for a whole chunk come from one
+  vectorized hash + ``searchsorted`` over the ring, the chunk scatters into
+  per-shard sub-batches in one pass (``ReplayBatch.scatter``), and each
+  sub-batch runs through the shard's PR-1 batched driver — the batched
+  throughput win carries over per shard.
+* **Read routing** — under fingerprint partitioning the LBA mapping for a
+  key lives wherever its *content* hashed, so the cluster keeps a routing
+  directory ((stream, lba) -> shard, the routing tier's metadata) updated
+  on writes; reads consult it (unknown keys fall back to the stream hash).
+  Batched chunks take a vectorized directory path when no read in the
+  chunk touches a key written in the same chunk, and replay the chunk's
+  routing per record otherwise, so batched routing is exactly the scalar
+  routing and per-shard record sequences are identical in both paths.
+* **Post-processing** — the exact phase runs *shard-locally*
+  (CASStor-style idle cleanup windows): ``run_postprocess`` sweeps every
+  shard, optionally budgeted per shard (``max_merges_per_shard``), and
+  reports blocks reclaimed via the stores' reclaim counters.
+* **Reporting** — ``finish`` aggregates per-shard ``HybridReport``s with
+  ``aggregate_reports``; with one shard the cluster is bit-exact against
+  the engine it wraps (enforced by tests/test_cluster.py).
+
+PBA namespaces: each shard's store allocates from a disjoint PBA range
+(``pba_stride`` apart), so physical ids stay globally unique — the serving
+layer keys KV pages by PBA across the whole cluster.
+"""
+
+from __future__ import annotations
+
+from typing import Callable, Dict, List, Optional, Sequence
+
+import numpy as np
+
+from .batch_replay import (
+    DEFAULT_BATCH_SIZE,
+    ReplayBatch,
+    engine_finish_replay,
+    engine_run_batch,
+)
+from .fingerprint import OP_WRITE, TRACE_DTYPE
+from .hybrid import HPDedup, HybridReport
+from .inline_engine import InlineMetrics
+from .postprocess import PostProcessMetrics
+
+# Packed (stream, lba) routing-directory keys: stream << LBA_BITS | lba.
+# 2^40 block addresses per stream (4 PiB volumes at 4 KB blocks) covers every
+# workload here; larger LBAs would alias directory entries (routing would
+# still be deterministic, just no longer key-exact).
+_LBA_BITS = 40
+
+
+def _splitmix64(x: np.ndarray) -> np.ndarray:
+    """Vectorized SplitMix64 finalizer: uint64 keys -> well-mixed uint64."""
+    x = np.asarray(x, dtype=np.uint64) + np.uint64(0x9E3779B97F4A7C15)
+    x = (x ^ (x >> np.uint64(30))) * np.uint64(0xBF58476D1CE4E5B9)
+    x = (x ^ (x >> np.uint64(27))) * np.uint64(0x94D049BB133111EB)
+    return x ^ (x >> np.uint64(31))
+
+
+class ConsistentHashRing:
+    """Consistent-hash ring with virtual nodes and vectorized lookups.
+
+    Each shard owns ``vnodes`` points on the uint64 ring; a key belongs to
+    the first point clockwise from its hash.  Adding shard N+1 only inserts
+    new points, so keys either stay put or move to the new shard — the
+    minimal-remap property that lets a cluster grow without re-sharding
+    the whole fingerprint space (verified in tests/test_cluster.py).
+    """
+
+    def __init__(self, num_shards: int, vnodes: int = 64, seed: int = 0):
+        if num_shards < 1:
+            raise ValueError(f"num_shards must be >= 1, got {num_shards}")
+        owners = np.repeat(np.arange(num_shards, dtype=np.int64), vnodes)
+        salts = np.tile(np.arange(vnodes, dtype=np.uint64), num_shards)
+        points = _splitmix64(
+            owners.astype(np.uint64) * np.uint64(0x100000001B3)
+            ^ (salts << np.uint64(20))
+            ^ np.uint64(seed)
+        )
+        order = np.argsort(points, kind="stable")
+        self.points = points[order]
+        self.owners = owners[order]
+
+    def shard_of_many(self, keys: np.ndarray) -> np.ndarray:
+        """Vectorized ring lookup: one hash + one searchsorted per batch."""
+        h = _splitmix64(np.asarray(keys, dtype=np.uint64))
+        idx = np.searchsorted(self.points, h, side="left")
+        # past the last point: wrap to the ring's first point
+        idx[idx == self.points.size] = 0
+        return self.owners[idx]
+
+    def shard_of(self, key: int) -> int:
+        return int(self.shard_of_many(np.asarray([key], dtype=np.uint64))[0])
+
+
+def aggregate_reports(reports: Sequence[HybridReport]) -> HybridReport:
+    """Sum per-shard reports into one cluster-level ``HybridReport``.
+
+    With fingerprint routing the shards partition the fingerprint space, so
+    summed ``unique_fingerprints`` / ``total_dup_writes`` equal the global
+    single-engine values; under stream routing they over-count content
+    duplicated across shards (per-shard exactness only).  Peak disk blocks
+    is the sum of per-shard peaks — exact while shards only grow (no
+    overwrites before the finish-time cleanup), an upper bound otherwise.
+    """
+    inline = InlineMetrics()
+    post = PostProcessMetrics()
+    peak = final = uniq = writes = dups = 0
+    for r in reports:
+        m = r.inline
+        inline.writes += m.writes
+        inline.reads += m.reads
+        inline.inline_dups += m.inline_dups
+        inline.cache_hits += m.cache_hits
+        inline.broken_runs += m.broken_runs
+        inline.cache_inserted += m.cache_inserted
+        for s, v in m.per_stream_dups.items():
+            inline.per_stream_dups[s] = inline.per_stream_dups.get(s, 0) + v
+        for s, v in m.per_stream_writes.items():
+            inline.per_stream_writes[s] = inline.per_stream_writes.get(s, 0) + v
+        post.passes += r.post.passes
+        post.merges += r.post.merges
+        post.blocks_reclaimed += r.post.blocks_reclaimed
+        peak += r.peak_disk_blocks
+        final += r.final_disk_blocks
+        uniq += r.unique_fingerprints
+        writes += r.total_writes
+        dups += r.total_dup_writes
+    return HybridReport(
+        inline=inline,
+        post=post,
+        peak_disk_blocks=peak,
+        final_disk_blocks=final,
+        unique_fingerprints=uniq,
+        total_writes=writes,
+        total_dup_writes=dups,
+    )
+
+
+class ShardedCluster:
+    """N per-shard engines behind one ``Engine`` protocol."""
+
+    def __init__(
+        self,
+        num_shards: int = 4,
+        engine_factory: Optional[Callable[[int], object]] = None,
+        routing: str = "fingerprint",
+        vnodes: int = 64,
+        seed: int = 0,
+        pba_stride: int = 1 << 48,
+        **engine_kwargs,
+    ):
+        if routing not in ("fingerprint", "stream"):
+            raise ValueError(f"routing must be 'fingerprint' or 'stream', got {routing!r}")
+        if engine_factory is None:
+            engine_factory = lambda shard: HPDedup(seed=seed + shard, **engine_kwargs)
+        elif engine_kwargs:
+            raise ValueError("engine_kwargs only apply to the default HPDedup factory")
+        self.num_shards = num_shards
+        self.routing = routing
+        self.ring = ConsistentHashRing(num_shards, vnodes=vnodes, seed=seed)
+        self.shards: List = [engine_factory(i) for i in range(num_shards)]
+        for i, engine in enumerate(self.shards):
+            engine.store._next_pba += i * pba_stride  # disjoint PBA namespaces
+        self._directory: Dict[int, int] = {}  # packed (stream, lba) -> shard
+        self.shard_reports: Optional[List[HybridReport]] = None
+
+    # -- routing -----------------------------------------------------------------
+    def shard_of_fp(self, fp: int) -> int:
+        return self.ring.shard_of(int(fp))
+
+    def engine_for(self, fp: int):
+        """The shard engine owning ``fp``'s partition (fingerprint routing)."""
+        if self.routing != "fingerprint":
+            raise ValueError("engine_for(fp) requires fingerprint routing")
+        return self.shards[self.shard_of_fp(fp)]
+
+    def engine_for_stream(self, stream: int):
+        return self.shards[self.ring.shard_of(int(stream))]
+
+    @staticmethod
+    def _packed_keys(streams: np.ndarray, lbas: np.ndarray) -> np.ndarray:
+        return (streams.astype(np.int64) << _LBA_BITS) + lbas.astype(np.int64)
+
+    def _route_chunk(self, rb: ReplayBatch) -> np.ndarray:
+        """Per-record shard ids for one chunk — identical to scalar routing.
+
+        Writes hash their fingerprint; reads consult the routing directory
+        (falling back to the stream hash for never-written keys).  The
+        vectorized path is valid whenever no read in the chunk touches a
+        key written earlier in the same chunk; otherwise the chunk's
+        routing replays per record so directory semantics stay exact.
+        """
+        if self.num_shards == 1:
+            return np.zeros(len(rb), dtype=np.int64)  # identity cluster
+        if self.routing == "stream":
+            return self.ring.shard_of_many(rb.stream.astype(np.uint64))
+        sid = self.ring.shard_of_many(rb.fp)
+        packed = self._packed_keys(rb.stream, rb.lba)
+        directory = self._directory
+        if rb.op is None:
+            directory.update(zip(packed.tolist(), sid.tolist()))
+            return sid
+        is_w = rb.op == OP_WRITE
+        if bool(is_w.all()):
+            directory.update(zip(packed.tolist(), sid.tolist()))
+            return sid
+        r_mask = ~is_w
+        w_packed = packed[is_w]
+        r_keys = packed[r_mask].tolist()
+        stream_sid = self.ring.shard_of_many(rb.stream[r_mask].astype(np.uint64))
+        if not bool(np.isin(packed[r_mask], w_packed).any()):
+            # no read sees an in-chunk write: pre-chunk directory is exact
+            sid = sid.copy()
+            sid[r_mask] = np.fromiter(
+                (directory.get(k, d) for k, d in zip(r_keys, stream_sid.tolist())),
+                dtype=np.int64,
+                count=len(r_keys),
+            )
+            directory.update(zip(w_packed.tolist(), sid[is_w].tolist()))
+            return sid
+        out = np.empty(len(rb), dtype=np.int64)
+        read_default = iter(stream_sid.tolist())
+        for i, (w, key, fs) in enumerate(zip(is_w.tolist(), packed.tolist(), sid.tolist())):
+            if w:
+                directory[key] = fs
+                out[i] = fs
+            else:
+                out[i] = directory.get(key, next(read_default))
+        return out
+
+    # -- Engine protocol ----------------------------------------------------------
+    def write_batch(self, streams, lbas, fps) -> np.ndarray:
+        """Scatter aligned write columns across shards; gather inline flags."""
+        rb = ReplayBatch(np.asarray(streams), np.asarray(lbas), np.asarray(fps))
+        sid = self._route_chunk(rb)
+        out = np.zeros(len(rb), dtype=bool)
+        parts, order = rb.scatter(sid, self.num_shards)
+        flags = []
+        for s, sub in enumerate(parts):
+            if sub is not None:
+                flags.append(self.shards[s].write_batch(sub.stream, sub.lba, sub.fp))
+        if flags:
+            out[order] = np.concatenate(flags)
+        return out
+
+    def replay(self, trace: np.ndarray) -> "ShardedCluster":
+        """Scalar reference path: route per record, replay each shard's
+        sub-trace through its engine's per-record oracle."""
+        assert trace.dtype == TRACE_DTYPE
+        sid = self._route_chunk(ReplayBatch.from_trace(trace))
+        for s in range(self.num_shards):
+            idx = np.nonzero(sid == s)[0]
+            if idx.size:
+                self.shards[s].replay(trace[idx])
+        return self
+
+    def replay_batched(
+        self, trace: np.ndarray, batch_size: int = DEFAULT_BATCH_SIZE
+    ) -> "ShardedCluster":
+        """Columnar batched replay: one vectorized route + scatter per chunk,
+        then each shard's PR-1 batched driver over its sub-batch.  Chunks are
+        ``batch_size * num_shards`` records so per-shard sub-batches stay
+        near the tuned batch size."""
+        rb = ReplayBatch.from_trace(trace)
+        for chunk in rb.batches(batch_size * self.num_shards):
+            sid = self._route_chunk(chunk)
+            parts, _ = chunk.scatter(sid, self.num_shards)
+            for s, sub in enumerate(parts):
+                if sub is not None:
+                    engine_run_batch(self.shards[s], sub)
+        for engine in self.shards:
+            engine_finish_replay(engine)
+        return self
+
+    def replay_batched_timed(self, trace: np.ndarray, batch_size: int = DEFAULT_BATCH_SIZE):
+        """``replay_batched`` with a per-phase wall-time breakdown.
+
+        Returns ``{"route": s, "scatter": s, "shard_times": [s, ...]}``.
+        The shard-scaling benchmark uses it to separate coordinator work
+        (route + scatter, paid once) from per-shard ingest time — shards
+        run serially in this process but concurrently on a real cluster,
+        so per-shard throughput is ``len(trace) / sum(shard_times)`` and
+        the parallel-cluster model is ``route + scatter + max(shard_times)``.
+        """
+        import time
+
+        t_route = t_scatter = 0.0
+        shard_times = [0.0] * self.num_shards
+        rb = ReplayBatch.from_trace(trace)
+        for chunk in rb.batches(batch_size * self.num_shards):
+            t0 = time.perf_counter()
+            sid = self._route_chunk(chunk)
+            t1 = time.perf_counter()
+            parts, _ = chunk.scatter(sid, self.num_shards)
+            t2 = time.perf_counter()
+            t_route += t1 - t0
+            t_scatter += t2 - t1
+            for s, sub in enumerate(parts):
+                if sub is not None:
+                    t3 = time.perf_counter()
+                    engine_run_batch(self.shards[s], sub)
+                    shard_times[s] += time.perf_counter() - t3
+        for s, engine in enumerate(self.shards):
+            t3 = time.perf_counter()
+            engine_finish_replay(engine)
+            shard_times[s] += time.perf_counter() - t3
+        return {"route": t_route, "scatter": t_scatter, "shard_times": shard_times}
+
+    def _invalidate_stale_keys(self) -> int:
+        """Cross-shard overwrite invalidation (router-driven unref).
+
+        When a key's newest write hashed to a different shard than an older
+        one, the old shard still maps the key to stale content; the routing
+        directory knows the current owner, so every other shard drops its
+        replica (``BlockStore.unmap`` -> refcount drop -> GC).  After the
+        sweep, live content is exactly the trace's last write per key —
+        the property that makes cluster dedup counts match the monolithic
+        oracle even on overwrite-heavy traces.  Callers must flush pending
+        duplicate runs first so every mapping is final.
+        """
+        if self.num_shards == 1 or self.routing != "fingerprint":
+            return 0  # keys cannot straddle shards
+        directory = self._directory
+        dropped = 0
+        for s, engine in enumerate(self.shards):
+            store = engine.store
+            stale = [
+                key
+                for key in store.lba_map
+                if directory.get((key[0] << _LBA_BITS) + key[1], s) != s
+            ]
+            for key in stale:
+                store.unmap(*key)
+                dropped += 1
+        return dropped
+
+    def finish(self) -> HybridReport:
+        """Finish every shard (flush + shard-local exact phase) and aggregate."""
+        for engine in self.shards:
+            engine_finish_replay(engine)  # flush pending runs: mappings final
+        self._invalidate_stale_keys()
+        self.shard_reports = [engine.finish() for engine in self.shards]
+        return aggregate_reports(self.shard_reports)
+
+    # -- shard-local post-processing (idle cleanup windows) ------------------------
+    def run_postprocess(
+        self, to_exact: bool = False, max_merges_per_shard: Optional[int] = None
+    ) -> int:
+        """One CASStor-style cleanup window: each shard runs its exact phase
+        locally (optionally budgeted), no cross-shard coordination beyond
+        the router's stale-key invalidations.  Returns the number of disk
+        blocks reclaimed across the cluster."""
+        before = self.reclaimed_blocks
+        for engine in self.shards:
+            engine_finish_replay(engine)
+        self._invalidate_stale_keys()
+        for engine in self.shards:
+            if hasattr(engine, "run_postprocess"):
+                engine.run_postprocess(to_exact=to_exact, max_merges=max_merges_per_shard)
+            elif to_exact:
+                engine.post.run_to_exact()
+            else:
+                engine.post.run(max_merges=max_merges_per_shard)
+        return self.reclaimed_blocks - before
+
+    @property
+    def reclaimed_blocks(self) -> int:
+        """Cluster-wide reclaim counter (see ``BlockStore.freed_blocks``)."""
+        return sum(engine.store.freed_blocks for engine in self.shards)
+
+    # -- invariants ----------------------------------------------------------------
+    def check_consistency(self) -> None:
+        """Per-shard store invariants + fingerprint-partition disjointness."""
+        for s, engine in enumerate(self.shards):
+            engine.store.check_consistency()
+            if self.routing == "fingerprint":
+                fps = list(engine.store.fp_table.keys())
+                if fps:
+                    owners = self.ring.shard_of_many(np.asarray(fps, dtype=np.uint64))
+                    assert bool((owners == s).all()), (
+                        f"shard {s} stores fingerprints owned by other shards"
+                    )

@@ -135,9 +135,11 @@ class HPDedup:
         return hpdedup_replay(self, trace, batch_size)
 
     # -- post-processing -----------------------------------------------------------
-    def run_postprocess(self, to_exact: bool = False) -> None:
+    def run_postprocess(self, to_exact: bool = False, max_merges: Optional[int] = None) -> None:
+        """One idle-time pass; ``max_merges`` budgets it (cluster cleanup
+        windows bound per-shard work so foreground traffic can interleave)."""
         self.inline.flush()
-        merged = self.post.run_to_exact() if to_exact else self.post.run()
+        merged = self.post.run_to_exact() if to_exact else self.post.run(max_merges=max_merges)
         # keep the fingerprint cache coherent with the merged PBAs
         for fp, pba in merged.items():
             holder = getattr(self.inline.cache, "owner", {}).get(fp)

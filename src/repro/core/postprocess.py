@@ -34,13 +34,15 @@ class PostProcessEngine:
     def run(self, max_merges: Optional[int] = None) -> Dict[int, int]:
         """One scan over the fingerprint table.
 
-        Returns {fingerprint: canonical_pba} for every merged fingerprint so
-        the caller (hybrid orchestrator) can refresh stale cache entries.
+        ``max_merges`` budgets *this* invocation (repeated idle windows each
+        get a fresh budget).  Returns {fingerprint: canonical_pba} for every
+        merged fingerprint so the caller (hybrid orchestrator) can refresh
+        stale cache entries.
         """
         merged: Dict[int, int] = {}
         dups = self.store.duplicate_fingerprints()
-        for fp in dups:
-            if max_merges is not None and self.metrics.merges >= max_merges:
+        for done, fp in enumerate(dups):
+            if max_merges is not None and done >= max_merges:
                 break
             reclaimed = self.store.merge_fingerprint(fp)
             self.metrics.merges += 1

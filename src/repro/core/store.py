@@ -16,7 +16,7 @@ requirement figure, Fig. 7), writes issued to disk.
 from __future__ import annotations
 
 from collections import OrderedDict
-from typing import Dict, List, Optional, Tuple
+from typing import Callable, Dict, List, Optional, Tuple
 
 
 class DLRUBuffer:
@@ -75,6 +75,13 @@ class BlockStore:
         # (fp, pba) pair can never go stale, so run decisions may skip the
         # TOCTOU revalidation.
         self._ever_freed = False
+        # reclaim accounting + hook: freed_blocks counts every PBA the GC
+        # releases (overwrite unrefs and post-processing merges alike);
+        # on_free, when set, observes each freed PBA — the serving layer
+        # uses it to drop KV pages, the cluster to meter shard-local
+        # cleanup windows.
+        self.freed_blocks = 0
+        self.on_free: Optional[Callable[[int], None]] = None
 
     # -- write path ------------------------------------------------------------
     def write_new_block(self, stream: int, lba: int, fp: int) -> int:
@@ -189,6 +196,24 @@ class BlockStore:
         if lba >= self._lba_watermark.get(stream, 0):
             self._lba_watermark[stream] = lba + 1
 
+    def unmap(self, stream: int, lba: int) -> Optional[int]:
+        """Drop a key's mapping and unref its PBA (GC may free it).
+
+        The cluster's router uses this as the cross-shard overwrite
+        invalidation: when a key's newest content hashes to a different
+        shard, the old owner must release its stale block.  Returns the
+        unmapped PBA, or ``None`` if the key was not mapped.
+        """
+        key = (stream, lba)
+        pba = self.lba_map.pop(key, None)
+        if pba is None:
+            return None
+        if self._reverse_dirty:
+            self._ensure_reverse()
+        self.lbas_of_pba.get(pba, set()).discard(key)
+        self._unref(pba)
+        return pba
+
     def _unref(self, pba: int) -> None:
         rc = self.refcount.get(pba, 0) - 1
         self.refcount[pba] = rc
@@ -197,6 +222,9 @@ class BlockStore:
 
     def _free(self, pba: int) -> None:
         self._ever_freed = True
+        self.freed_blocks += 1
+        if self.on_free is not None:
+            self.on_free(pba)
         fp = self.fp_of_pba.pop(pba, None)
         if fp is not None:
             lst = self.fp_table.get(fp)

@@ -20,7 +20,7 @@ from typing import Dict, Iterator, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from repro.core import HPDedup
+from repro.core import HPDedup, ShardedCluster
 from repro.kernels.ops import fingerprint_ints
 
 
@@ -105,7 +105,13 @@ class PipelineMetrics:
 
 
 class DedupIngestPipeline:
-    """Ingest -> fingerprint (device, batched) -> HPDedup -> batch assembly."""
+    """Ingest -> fingerprint (device, batched) -> HPDedup -> batch assembly.
+
+    ``num_shards > 1`` swaps the single engine for a ``ShardedCluster``
+    (consistent-hash fingerprint partitioning) behind the same ``Engine``
+    protocol — the ingest path is unchanged because it only ever calls
+    ``write_batch``.
+    """
 
     def __init__(
         self,
@@ -116,6 +122,7 @@ class DedupIngestPipeline:
         fingerprint_batch: int = 64,
         postprocess_every_blocks: int = 4096,
         token_skew: float = 1.2,
+        num_shards: int = 1,
         seed: int = 0,
     ):
         self.block_tokens = block_tokens
@@ -134,13 +141,26 @@ class DedupIngestPipeline:
         self.rates = np.array([t.rate for t in tenants], dtype=np.float64)
         self.rates /= self.rates.sum()
         self.tenant_ids = [t.tenant_id for t in tenants]
-        self.engine = HPDedup(
-            cache_entries=cache_entries,
-            policy="lru",
-            use_jax_estimator=True,
-            postprocess_period=postprocess_every_blocks,
-            seed=seed,
-        )
+        if num_shards > 1:
+            # cluster-backed ingest: fingerprint-partitioned shards, each
+            # with a slice of the cache budget and its own shard-local
+            # idle-time post-processing window
+            self.engine = ShardedCluster(
+                num_shards=num_shards,
+                cache_entries=max(1, cache_entries // num_shards),
+                policy="lru",
+                use_jax_estimator=True,
+                postprocess_period=postprocess_every_blocks,
+                seed=seed,
+            )
+        else:
+            self.engine = HPDedup(
+                cache_entries=cache_entries,
+                policy="lru",
+                use_jax_estimator=True,
+                postprocess_period=postprocess_every_blocks,
+                seed=seed,
+            )
         self.rng = np.random.default_rng(seed + 7)
         self.metrics = PipelineMetrics()
         # block store: fingerprint -> token block (the "disk")
@@ -209,14 +229,18 @@ class DedupIngestPipeline:
             yield self.next_batch(batch_size, seq_len)
 
     # -- checkpointable state ------------------------------------------------------
+    def _estimators(self) -> List:
+        """Per-shard LDSS estimators (a single-engine pipeline has one)."""
+        engines = self.engine.shards if isinstance(self.engine, ShardedCluster) else [self.engine]
+        return [e.inline.estimator for e in engines]
+
     def state_dict(self) -> dict:
-        est = self.engine.inline.estimator
         return {
             "fifo": self._fifo.tolist(),
             "lba": dict(self._lba),
             "rng": self.rng.bit_generator.state,
             "streams": {tid: s.state_dict() for tid, s in self.streams.items()},
-            "estimator": est.state_dict() if est else None,
+            "estimator": [est.state_dict() if est else None for est in self._estimators()],
             "metrics": dataclasses.asdict(self.metrics),
         }
 
@@ -226,6 +250,16 @@ class DedupIngestPipeline:
         self.rng.bit_generator.state = st["rng"]
         for tid, s in st["streams"].items():
             self.streams[int(tid)].load_state(s)
-        if st["estimator"] and self.engine.inline.estimator:
-            self.engine.inline.estimator.load_state(st["estimator"])
+        est_states = st["estimator"]
+        if isinstance(est_states, dict) or est_states is None:
+            est_states = [est_states]  # legacy single-engine checkpoints
+        estimators = self._estimators()
+        if len(est_states) != len(estimators):
+            raise ValueError(
+                f"checkpoint has {len(est_states)} shard estimator state(s) but this "
+                f"pipeline has {len(estimators)} — restore with the same num_shards"
+            )
+        for est, est_st in zip(estimators, est_states):
+            if est is not None and est_st:
+                est.load_state(est_st)
         self.metrics = PipelineMetrics(**st["metrics"])

@@ -27,7 +27,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import HPDedup
+from repro.core import HPDedup, ShardedCluster
 from repro.kernels.ops import fingerprint_ints
 
 
@@ -121,13 +121,14 @@ class DedupKVServer:
         max_slots: int = 1024,
         cache_entries: int = 512,
         postprocess_period: int = 256,
+        num_shards: int = 1,
         seed: int = 0,
     ):
         self.model = model
         self.params = params
         self.page_tokens = page_tokens
         self.max_slots = max_slots
-        self.dedup = HPDedup(
+        engine_kwargs = dict(
             cache_entries=cache_entries,
             policy="lru",
             adaptive_threshold=False,
@@ -136,10 +137,30 @@ class DedupKVServer:
             use_jax_estimator=True,
             seed=seed,
         )
+        if num_shards > 1:
+            # cluster-backed page dedup: fingerprints partition across
+            # shards (disjoint PBA namespaces keep page ids unique)
+            self.dedup = ShardedCluster(num_shards=num_shards, **engine_kwargs)
+        else:
+            self.dedup = HPDedup(**engine_kwargs)
         self.pages: Dict[int, Any] = {}  # pba -> cache-slice pytree
         self.metrics = ServeMetrics()
         self._decode = jax.jit(model.decode_step)
         self._request_counter = 0
+        # reclaim hook: the store(s) tell us which PBAs the GC freed so the
+        # matching KV pages drop without scanning refcounts cluster-wide
+        self._freed_pbas: List[int] = []
+        for engine in self._engines():
+            engine.store.on_free = self._freed_pbas.append
+
+    def _engines(self) -> List[HPDedup]:
+        return self.dedup.shards if isinstance(self.dedup, ShardedCluster) else [self.dedup]
+
+    def _engine_of(self, fp: int) -> HPDedup:
+        """The shard engine owning ``fp`` (the engine itself when unsharded)."""
+        if isinstance(self.dedup, ShardedCluster):
+            return self.dedup.engine_for(fp)
+        return self.dedup
 
     # -- internals -------------------------------------------------------------
     def _compute_page(self, cache, tokens: np.ndarray, pos0: int) -> Any:
@@ -167,15 +188,15 @@ class DedupKVServer:
         blocks = [np.asarray(tokens[i * pt : (i + 1) * pt]) for i in range(nblocks)]
         fps = chain_fingerprints_batched(0, np.stack(blocks)) if blocks else []
         lbas = [(req << 24) | i for i in range(nblocks)]
-        store = self.dedup.store
         # probe cached PBAs first (prefix fps are unique within a request,
-        # so probes are independent of this request's own writes)...
-        lookup = self.dedup.inline.cache.lookup
-        pbas = [lookup(tenant, fp) for fp in fps]
+        # so probes are independent of this request's own writes); each
+        # probe goes to the shard owning that fingerprint's partition...
+        pbas = [self._engine_of(fp).inline.cache.lookup(tenant, fp) for fp in fps]
         # ...then push the whole request through the batched write path
         if nblocks:
             self.dedup.write_batch(np.full(nblocks, tenant, dtype=np.int64), lbas, fps)
-            self.dedup.inline.flush_stream(tenant)
+            for engine in self._engines():
+                engine.inline.flush_stream(tenant)
         self.metrics.blocks_total += nblocks
         self.metrics.pages_logical += nblocks
         for i, blk in enumerate(blocks):
@@ -188,7 +209,7 @@ class DedupKVServer:
             else:
                 cache = self._compute_page(cache, blk, pos)
                 page = _slot_slice(cache, pos, pt)
-                new_pba = store.lba_map.get((tenant, lbas[i]))
+                new_pba = self._engine_of(fps[i]).store.lba_map.get((tenant, lbas[i]))
                 if new_pba is not None and new_pba not in self.pages:
                     self.pages[new_pba] = page
                     self.metrics.pages_allocated += 1
@@ -214,15 +235,19 @@ class DedupKVServer:
         return out, cache
 
     def run_postprocess(self) -> int:
-        """Background exact pass: merge duplicate pages the cache missed."""
-        before = len(self.dedup.store.duplicate_fingerprints())
-        merged = self.dedup.post.run()
-        for fp, pba in merged.items():
-            pass  # LBA tables already remapped by the store
-        # free page payloads whose PBAs were reclaimed
-        live = set(self.dedup.store.refcount.keys())
-        for pba in list(self.pages.keys()):
-            if pba not in live:
+        """Background exact pass: merge duplicate pages the cache missed.
+
+        Runs shard-locally on a cluster (each shard's fingerprint partition
+        is swept independently); the stores' ``on_free`` reclaim hook names
+        the PBAs the GC released, so the matching KV pages drop without a
+        cluster-wide refcount scan.
+        """
+        before = sum(len(e.store.duplicate_fingerprints()) for e in self._engines())
+        for engine in self._engines():
+            engine.post.run()  # LBA tables are remapped by the store
+        for pba in self._freed_pbas:
+            if pba in self.pages:
                 del self.pages[pba]
                 self.metrics.post_pages_merged += 1
+        self._freed_pbas.clear()
         return before

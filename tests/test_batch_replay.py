@@ -99,6 +99,42 @@ def test_equivalence_overwrite_heavy_interleaving():
         _assert_equal_reports(lambda: PurePostProcessing(), recs, bs)
 
 
+def test_fallback_store_path_forced_on_every_subbatch(monkeypatch):
+    """Deterministically defeat the LBA-watermark fast path on EVERY
+    sub-batch (not just incidentally): each sub-batch repeats (stream, LBA)
+    keys, so ``_certify_staged`` must refuse staging every time and the
+    per-record store fallback must still match the scalar oracle."""
+    import repro.core.batch_replay as br
+
+    n, bs = 2_000, 64
+    rng = np.random.default_rng(2)
+    recs = np.zeros(n, dtype=TRACE_DTYPE)
+    recs["ts"] = np.arange(n)
+    recs["stream"] = np.arange(n) % 2
+    recs["lba"] = (np.arange(n) // 2) % 4  # 8 keys cycling: every sub-batch collides
+    recs["op"] = OP_WRITE
+    recs["fp"] = rng.integers(1, 64, n)
+
+    orig = br._certify_staged
+    verdicts = []
+
+    def spy(store, w_streams, w_lbas, pending_keys=None):
+        verdict = orig(store, w_streams, w_lbas, pending_keys)
+        verdicts.append(verdict)
+        return verdict
+
+    monkeypatch.setattr(br, "_certify_staged", spy)
+    for factory in (lambda: HPDedup(cache_entries=32), lambda: PurePostProcessing()):
+        verdicts.clear()
+        _assert_equal_reports(factory, recs, bs)
+        assert len(verdicts) >= n // bs  # one certification attempt per sub-batch
+        assert not any(verdicts), "watermark fast path was not defeated"
+        # and the fallback left nothing staged behind
+        engine = factory()
+        engine.replay_batched(recs, batch_size=bs)
+        assert not engine.store._staged_writes and not engine.store._staged_dups
+
+
 def test_write_batch_streaming_matches_scalar_writes(workload_b):
     """Streaming ``write_batch`` chunks == per-record ``write`` calls."""
     trace, _ = workload_b

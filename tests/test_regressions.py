@@ -61,3 +61,26 @@ def test_interval_factor_self_tunes_toward_1_minus_d():
         est.observe_write(0, i % max(1, n // 10), was_inline_dup=(i % 10 != 0))
     assert est.interval_count == 1
     assert est.interval_factor < 0.3   # ~= 1 - 0.9
+
+
+def test_dlru_buffer_divergence_is_out_of_contract():
+    """Known, intentional divergence (pinned): the batched replay path does
+    not model the D-LRU data buffer, so its hit/miss counters drift from
+    the scalar path's — but no ``HybridReport`` field reads them, so the
+    reports must still agree field for field.  If the buffer counters ever
+    join the report contract, this test is the tripwire (see
+    ARCHITECTURE.md, "Known divergence")."""
+    from repro.core import generate_workload
+
+    trace, _ = generate_workload("A", total_requests=5_000, seed=2, mix={"mail": 2})
+    scalar = HPDedup(cache_entries=256)
+    scalar.replay(trace)
+    batched = HPDedup(cache_entries=256)
+    batched.replay_batched(trace, batch_size=256)
+    # the divergence is real: scalar models every block access, batched
+    # only the scalar-replayed trigger-boundary records
+    s_buf, b_buf = scalar.store.buffer, batched.store.buffer
+    assert s_buf.hits + s_buf.misses > 0
+    assert (s_buf.hits, s_buf.misses) != (b_buf.hits, b_buf.misses)
+    # ...and it is contained: every report field still matches bit-for-bit
+    assert scalar.finish() == batched.finish()
