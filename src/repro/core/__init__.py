@@ -6,7 +6,11 @@ Public surface:
   drives any engine, batched or scalar, over a merged trace.
 * ``HPDedup`` / ``HybridReport`` — the hybrid prioritized dedup mechanism.
 * ``ShardedCluster`` — consistent-hash fingerprint partitioning across N
-  per-shard engines, same ``Engine`` protocol (``core.cluster``).
+  per-shard engines, same ``Engine`` protocol (``core.cluster``); grows and
+  shrinks live via ``resize`` (minimal-remap migration).
+* ``snapshot_engine`` / ``restore_engine`` / ``load_engine_state`` —
+  versioned, JSON-serializable state trees for every engine; a restored
+  engine is bit-exact on all future writes (``core.snapshot``).
 * ``ReplayBatch`` — columnar batched ingestion (``core.batch_replay``).
 * ``StreamLocalityEstimator`` — reservoir + unseen-estimator LDSS tracking.
 * ``PrioritizedCache`` / ``GlobalCache`` — fingerprint caches.
@@ -21,7 +25,13 @@ from typing import Protocol, runtime_checkable
 import numpy as np
 
 from .baselines import DIODE, PurePostProcessing, make_idedup
-from .batch_replay import DEFAULT_BATCH_SIZE, ReplayBatch, run_replay
+from .batch_replay import (
+    DEFAULT_BATCH_SIZE,
+    ReplayBatch,
+    engine_finish_replay,
+    engine_ingest,
+    run_replay,
+)
 from .cache import ARCCache, GlobalCache, LFUCache, LRUCache, PrioritizedCache
 from .cluster import ConsistentHashRing, ShardedCluster, aggregate_reports
 from .ffh import ffh_from_counts, ffh_from_sample, occurrence_counts
@@ -32,6 +42,15 @@ from .ldss import HoltPredictor, StreamLocalityEstimator
 from .postprocess import PostProcessEngine
 from .reservoir import Reservoir
 from .segment_tree import FenwickSegments
+from .snapshot import (
+    SNAPSHOT_FORMAT,
+    SNAPSHOT_VERSION,
+    load_engine_state,
+    report_from_tree,
+    report_to_tree,
+    restore_engine,
+    snapshot_engine,
+)
 from .store import BlockStore
 from .threshold import SpatialThreshold
 from .traces import TEMPLATES, WORKLOADS, generate_workload, trace_stats
@@ -78,7 +97,16 @@ __all__ = [
     "aggregate_reports",
     "ReplayBatch",
     "run_replay",
+    "engine_ingest",
+    "engine_finish_replay",
     "DEFAULT_BATCH_SIZE",
+    "SNAPSHOT_FORMAT",
+    "SNAPSHOT_VERSION",
+    "snapshot_engine",
+    "restore_engine",
+    "load_engine_state",
+    "report_to_tree",
+    "report_from_tree",
     "DIODE",
     "PurePostProcessing",
     "make_idedup",

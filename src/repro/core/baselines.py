@@ -94,6 +94,31 @@ class PurePostProcessing:
             total_dup_writes=self._dup_writes,
         )
 
+    # -- snapshot/restore ---------------------------------------------------------
+    def snapshot(self) -> dict:
+        return {
+            "store": self.store.snapshot(),
+            "metrics": self.metrics.snapshot(),
+            "post_metrics": self.post.metrics.snapshot(),
+            "total_writes": self._total_writes,
+            "dup_writes": self._dup_writes,
+            "seen": sorted(self._seen),
+        }
+
+    def load_snapshot(self, tree: dict) -> None:
+        self.store.load_snapshot(tree["store"])
+        self.metrics = InlineMetrics.from_snapshot(tree["metrics"])
+        self.post.metrics = PostProcessMetrics.from_snapshot(tree["post_metrics"])
+        self._total_writes = int(tree["total_writes"])
+        self._dup_writes = int(tree["dup_writes"])
+        self._seen = set(int(fp) for fp in tree["seen"])
+
+    @classmethod
+    def restore(cls, tree: dict) -> "PurePostProcessing":
+        engine = cls()
+        engine.load_snapshot(tree)
+        return engine
+
 
 class DIODE:
     """File-type-hinted hybrid dedup with one global adaptive threshold."""
@@ -105,6 +130,12 @@ class DIODE:
         policy: str = "lru",
         seed: int = 0,
     ):
+        self._config = dict(
+            cache_entries=cache_entries,
+            stream_templates=dict(stream_templates or {}),
+            policy=policy,
+            seed=seed,
+        )
         self.store = BlockStore()
         self.cache = GlobalCache(cache_entries, policy=policy)
         self.post = PostProcessEngine(self.store)
@@ -205,6 +236,48 @@ class DIODE:
         from .batch_replay import diode_replay
 
         return diode_replay(self, trace, batch_size)
+
+    # -- snapshot/restore ---------------------------------------------------------
+    def snapshot(self) -> dict:
+        config = dict(self._config)
+        config["stream_templates"] = [[s, t] for s, t in config["stream_templates"].items()]
+        return {
+            "config": config,
+            "store": self.store.snapshot(),
+            "cache": self.cache.snapshot(),
+            "metrics": self.metrics.snapshot(),
+            "post_metrics": self.post.metrics.snapshot(),
+            "thresholds": self.thresholds.snapshot(),
+            "total_writes": self._total_writes,
+            "dup_writes": self._dup_writes,
+            "seen": sorted(self._seen),
+            "run": [list(it) for it in self._run],
+            "run_next_lba": self._run_next_lba,
+            "run_stream": self._run_stream,
+            "writes_since_update": self._writes_since_update,
+        }
+
+    def load_snapshot(self, tree: dict) -> None:
+        self.store.load_snapshot(tree["store"])
+        self.cache.load_snapshot(tree["cache"])
+        self.metrics = InlineMetrics.from_snapshot(tree["metrics"])
+        self.post.metrics = PostProcessMetrics.from_snapshot(tree["post_metrics"])
+        self.thresholds.load_snapshot(tree["thresholds"])
+        self._total_writes = int(tree["total_writes"])
+        self._dup_writes = int(tree["dup_writes"])
+        self._seen = set(int(fp) for fp in tree["seen"])
+        self._run = [(int(s), int(lba), int(fp), int(pba)) for s, lba, fp, pba in tree["run"]]
+        self._run_next_lba = None if tree["run_next_lba"] is None else int(tree["run_next_lba"])
+        self._run_stream = None if tree["run_stream"] is None else int(tree["run_stream"])
+        self._writes_since_update = int(tree["writes_since_update"])
+
+    @classmethod
+    def restore(cls, tree: dict) -> "DIODE":
+        config = dict(tree["config"])
+        config["stream_templates"] = {int(s): t for s, t in config["stream_templates"]}
+        engine = cls(**config)
+        engine.load_snapshot(tree)
+        return engine
 
     def finish(self) -> HybridReport:
         self._flush_run()

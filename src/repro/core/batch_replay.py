@@ -153,6 +153,22 @@ def run_replay(engine, trace: np.ndarray, batched: bool = True,
     return engine.replay(trace)
 
 
+def engine_ingest(engine, trace: np.ndarray, batch_size: int = DEFAULT_BATCH_SIZE):
+    """Mid-stream batched ingest for a single engine: ``replay_batched``
+    WITHOUT the end-of-replay flush, so pending duplicate runs survive.
+
+    This is the resumable entry point the snapshot/restore harness drives:
+    ingest a prefix, ``snapshot()``, restore elsewhere, ingest the rest,
+    then ``engine_finish_replay`` + ``finish()`` — bit-exact with one
+    uninterrupted replay.  (``ShardedCluster.ingest_batched`` is the
+    cluster-level analogue.)
+    """
+    rb = ReplayBatch.from_trace(trace)
+    for chunk in rb.batches(batch_size):
+        engine_run_batch(engine, chunk)
+    return engine
+
+
 def engine_run_batch(engine, rb: ReplayBatch, out: Optional[np.ndarray] = None) -> None:
     """One batched ingest step for any engine, WITHOUT the end-of-replay
     flush — the cluster driver feeds a shard many sub-batches and must not

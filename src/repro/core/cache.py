@@ -24,6 +24,7 @@ from typing import Dict, Optional, Tuple
 import numpy as np
 
 from .segment_tree import FenwickSegments
+from .statetree import from_pairs, pairs
 
 # ---------------------------------------------------------------------------
 # Replacement policies (per-stream building blocks).
@@ -54,11 +55,21 @@ class LRUCache:
     def remove(self, fp: int) -> None:
         self._d.pop(fp, None)
 
+    def peek(self, fp: int) -> Optional[int]:
+        """Value without touching recency (shard-migration / snapshot probe)."""
+        return self._d.get(fp)
+
     def __contains__(self, fp: int) -> bool:
         return fp in self._d
 
     def __len__(self) -> int:
         return len(self._d)
+
+    def snapshot(self) -> dict:
+        return {"kind": "lru", "items": pairs(self._d)}
+
+    def load_snapshot(self, tree: dict) -> None:
+        self._d = OrderedDict((int(fp), int(pba)) for fp, pba in tree["items"])
 
 
 class LFUCache:
@@ -117,11 +128,35 @@ class LFUCache:
         if not self._buckets[f]:
             del self._buckets[f]
 
+    def peek(self, fp: int) -> Optional[int]:
+        """Value without touching frequency (shard-migration / snapshot probe)."""
+        return self._val.get(fp)
+
     def __contains__(self, fp: int) -> bool:
         return fp in self._val
 
     def __len__(self) -> int:
         return len(self._val)
+
+    def snapshot(self) -> dict:
+        # buckets carry the LRU tie-break order; _freq is derivable from them
+        return {
+            "kind": "lfu",
+            "val": pairs(self._val),
+            "buckets": [[f, list(b)] for f, b in self._buckets.items()],
+            "minfreq": self._minfreq,
+        }
+
+    def load_snapshot(self, tree: dict) -> None:
+        self._val = from_pairs(tree["val"], value=int)
+        self._buckets = defaultdict(OrderedDict)
+        self._freq = {}
+        for f, fps in tree["buckets"]:
+            f = int(f)
+            for fp in fps:
+                self._buckets[f][int(fp)] = None
+                self._freq[int(fp)] = f
+        self._minfreq = int(tree["minfreq"])
 
 
 class ARCCache:
@@ -200,11 +235,35 @@ class ARCCache:
         self.t1.pop(fp, None)
         self.t2.pop(fp, None)
 
+    def peek(self, fp: int) -> Optional[int]:
+        """Value without T1->T2 promotion (shard-migration / snapshot probe)."""
+        v = self.t1.get(fp)
+        return v if v is not None else self.t2.get(fp)
+
     def __contains__(self, fp: int) -> bool:
         return fp in self.t1 or fp in self.t2
 
     def __len__(self) -> int:
         return len(self.t1) + len(self.t2)
+
+    def snapshot(self) -> dict:
+        return {
+            "kind": "arc",
+            "c": self.c,
+            "p": self.p,
+            "t1": pairs(self.t1),
+            "t2": pairs(self.t2),
+            "b1": list(self.b1),
+            "b2": list(self.b2),
+        }
+
+    def load_snapshot(self, tree: dict) -> None:
+        self.c = int(tree["c"])
+        self.p = float(tree["p"])
+        self.t1 = OrderedDict((int(k), int(v)) for k, v in tree["t1"])
+        self.t2 = OrderedDict((int(k), int(v)) for k, v in tree["t2"])
+        self.b1 = OrderedDict((int(k), None) for k in tree["b1"])
+        self.b2 = OrderedDict((int(k), None) for k in tree["b2"])
 
 
 POLICIES = {"lru": LRUCache, "lfu": LFUCache, "arc": ARCCache}
@@ -215,6 +274,13 @@ def make_policy(name: str, capacity_hint: int = 1024):
     if name == "arc":
         return ARCCache(capacity_hint)
     return POLICIES[name]()
+
+
+def policy_from_snapshot(tree: dict):
+    """Rebuild a replacement-policy instance from its ``snapshot()`` tree."""
+    p = POLICIES[tree["kind"]]()
+    p.load_snapshot(tree)
+    return p
 
 
 # ---------------------------------------------------------------------------
@@ -252,6 +318,29 @@ class GlobalCache:
 
     def __len__(self) -> int:
         return len(self.cache)
+
+    # -- snapshot/restore + shard migration ------------------------------------
+    def snapshot(self) -> dict:
+        return {"inserted": self.inserted, "policy": self.cache.snapshot()}
+
+    def load_snapshot(self, tree: dict) -> None:
+        self.inserted = int(tree["inserted"])
+        self.cache = policy_from_snapshot(tree["policy"])
+
+    def evict_fp(self, fp: int) -> Optional[int]:
+        """Drop ``fp``; returns its PBA (resharding pulls moved entries out)."""
+        pba = self.cache.peek(fp)
+        if pba is not None:
+            self.cache.remove(fp)
+        return pba
+
+    def migrate_in(self, stream: int, fp: int, pba: int) -> bool:
+        """Install a migrated entry iff capacity allows — a *move*, not an
+        admission: no eviction, no ``inserted`` bump, no RNG draw."""
+        if fp in self.cache or len(self.cache) >= self.capacity:
+            return fp in self.cache
+        self.cache.insert(fp, pba)
+        return True
 
 
 class PrioritizedCache:
@@ -388,3 +477,64 @@ class PrioritizedCache:
 
     def __len__(self) -> int:
         return self.total
+
+    # -- snapshot/restore + shard migration ------------------------------------
+    def snapshot(self) -> dict:
+        """Everything a restored cache needs to make bit-identical decisions:
+        per-stream policy state in order, the owner index, LDSS priorities,
+        the eviction RNG state and the Fenwick slot layout (a draw resolves
+        by slot order, so slots must survive, not just weights)."""
+        return {
+            "rng": self.rng.bit_generator.state,
+            "streams": [[s, sub.snapshot()] for s, sub in self.streams.items()],
+            "owner": pairs(self.owner),
+            "ldss": pairs(self.ldss),
+            "best_ldss": self._best_ldss,
+            "total": self.total,
+            "inserted": self.inserted,
+            "segments": self.segments.snapshot(),
+        }
+
+    def load_snapshot(self, tree: dict) -> None:
+        self.rng = np.random.default_rng(0)
+        self.rng.bit_generator.state = tree["rng"]
+        self.streams = {int(s): policy_from_snapshot(sub) for s, sub in tree["streams"]}
+        self.owner = from_pairs(tree["owner"], value=int)
+        self.ldss = from_pairs(tree["ldss"], value=float)
+        self._best_ldss = float(tree["best_ldss"])
+        self.total = int(tree["total"])
+        self.inserted = int(tree["inserted"])
+        self.segments = FenwickSegments.from_snapshot(tree["segments"])
+
+    def evict_fp(self, fp: int) -> Optional[int]:
+        """Drop ``fp``; returns its PBA (resharding pulls moved entries out).
+        Mirrors ``_evict``'s bookkeeping but targets one fingerprint and
+        consumes no RNG."""
+        holder = self.owner.get(fp)
+        if holder is None:
+            return None
+        sub = self.streams[holder]
+        pba = sub.peek(fp)
+        sub.remove(fp)
+        del self.owner[fp]
+        self.total -= 1
+        if len(sub) == 0:
+            self.segments.set_weight(holder, 0.0)
+        return pba
+
+    def migrate_in(self, stream: int, fp: int, pba: int) -> bool:
+        """Install a migrated entry iff capacity allows — a *move*, not an
+        admission: no admission filter, no eviction, no ``inserted`` bump,
+        no RNG draw.  Dropping under pressure is safe (the cache is advisory;
+        post-processing reclaims any resulting inline miss)."""
+        if fp in self.owner:
+            return True
+        if self.total >= self.capacity:
+            return False
+        sub = self._sub(stream)
+        sub.insert(fp, pba)
+        self.owner[fp] = stream
+        self.total += 1
+        if len(sub) == 1:
+            self.segments.set_weight(stream, self._evict_priority(stream))
+        return True

@@ -39,8 +39,16 @@ cluster without code changes:
   shard, optionally budgeted per shard (``max_merges_per_shard``), and
   reports blocks reclaimed via the stores' reclaim counters.
 * **Reporting** — ``finish`` aggregates per-shard ``HybridReport``s with
-  ``aggregate_reports``; with one shard the cluster is bit-exact against
-  the engine it wraps (enforced by tests/test_cluster.py).
+  ``aggregate_reports`` (plus any shards retired by shrinks); with one
+  shard the cluster is bit-exact against the engine it wraps (enforced by
+  tests/test_cluster.py).
+* **Elasticity + durability** — ``resize(new_num_shards)`` grows/shrinks
+  the live cluster, migrating only the fingerprints the ring's
+  minimal-remap property moves (ARCHITECTURE.md, "Elastic resharding");
+  ``snapshot()``/``restore`` round-trip the whole cluster — every shard
+  engine, the routing directory, retired reports — through a versioned
+  JSON state tree such that a restored cluster is bit-exact on all future
+  writes (``core.snapshot``; tests/test_snapshot_restore.py).
 
 PBA namespaces: each shard's store allocates from a disjoint PBA range
 (``pba_stride`` apart), so physical ids stay globally unique — the serving
@@ -175,17 +183,37 @@ class ShardedCluster:
         if routing not in ("fingerprint", "stream"):
             raise ValueError(f"routing must be 'fingerprint' or 'stream', got {routing!r}")
         if engine_factory is None:
+            self._engine_kwargs: Optional[dict] = dict(engine_kwargs)
             engine_factory = lambda shard: HPDedup(seed=seed + shard, **engine_kwargs)
         elif engine_kwargs:
             raise ValueError("engine_kwargs only apply to the default HPDedup factory")
+        else:
+            self._engine_kwargs = None  # custom factory: not serializable
         self.num_shards = num_shards
         self.routing = routing
+        self._vnodes = vnodes
+        self._seed = seed
+        self._pba_stride = pba_stride
+        self._engine_factory = engine_factory
         self.ring = ConsistentHashRing(num_shards, vnodes=vnodes, seed=seed)
-        self.shards: List = [engine_factory(i) for i in range(num_shards)]
-        for i, engine in enumerate(self.shards):
-            engine.store._next_pba += i * pba_stride  # disjoint PBA namespaces
+        self.shards: List = [self._make_shard_engine(i) for i in range(num_shards)]
         self._directory: Dict[int, int] = {}  # packed (stream, lba) -> shard
+        # reports of shards drained and removed by ``resize`` shrinks: their
+        # accrued counters stay part of the cluster's aggregate report
+        self._retired_reports: List[HybridReport] = []
         self.shard_reports: Optional[List[HybridReport]] = None
+
+    def _make_shard_engine(self, shard: int):
+        """Build shard ``shard``'s engine with its disjoint PBA namespace."""
+        if self._engine_factory is None:
+            raise ValueError(
+                "this cluster was restored from a snapshot of a custom "
+                "engine_factory cluster; growing it requires passing "
+                "engine_factory to resize()"
+            )
+        engine = self._engine_factory(shard)
+        engine.store._next_pba += shard * self._pba_stride
+        return engine
 
     # -- routing -----------------------------------------------------------------
     def shard_of_fp(self, fp: int) -> int:
@@ -277,13 +305,14 @@ class ShardedCluster:
                 self.shards[s].replay(trace[idx])
         return self
 
-    def replay_batched(
+    def ingest_batched(
         self, trace: np.ndarray, batch_size: int = DEFAULT_BATCH_SIZE
     ) -> "ShardedCluster":
-        """Columnar batched replay: one vectorized route + scatter per chunk,
-        then each shard's PR-1 batched driver over its sub-batch.  Chunks are
-        ``batch_size * num_shards`` records so per-shard sub-batches stay
-        near the tuned batch size."""
+        """Mid-stream columnar ingest: like ``replay_batched`` but WITHOUT
+        the end-of-replay flush, so pending duplicate runs survive the call.
+        This is the resumable entry point — ingest part of a trace, take a
+        ``snapshot()``, and a restored cluster ingesting the remainder is
+        bit-exact with one uninterrupted replay (tests/test_snapshot_restore)."""
         rb = ReplayBatch.from_trace(trace)
         for chunk in rb.batches(batch_size * self.num_shards):
             sid = self._route_chunk(chunk)
@@ -291,6 +320,16 @@ class ShardedCluster:
             for s, sub in enumerate(parts):
                 if sub is not None:
                     engine_run_batch(self.shards[s], sub)
+        return self
+
+    def replay_batched(
+        self, trace: np.ndarray, batch_size: int = DEFAULT_BATCH_SIZE
+    ) -> "ShardedCluster":
+        """Columnar batched replay: one vectorized route + scatter per chunk,
+        then each shard's PR-1 batched driver over its sub-batch.  Chunks are
+        ``batch_size * num_shards`` records so per-shard sub-batches stay
+        near the tuned batch size."""
+        self.ingest_batched(trace, batch_size)
         for engine in self.shards:
             engine_finish_replay(engine)
         return self
@@ -358,12 +397,14 @@ class ShardedCluster:
         return dropped
 
     def finish(self) -> HybridReport:
-        """Finish every shard (flush + shard-local exact phase) and aggregate."""
+        """Finish every shard (flush + shard-local exact phase) and aggregate.
+        Shards retired by ``resize`` shrinks contribute their accrued
+        counters through ``_retired_reports``."""
         for engine in self.shards:
             engine_finish_replay(engine)  # flush pending runs: mappings final
         self._invalidate_stale_keys()
         self.shard_reports = [engine.finish() for engine in self.shards]
-        return aggregate_reports(self.shard_reports)
+        return aggregate_reports(self.shard_reports + self._retired_reports)
 
     # -- shard-local post-processing (idle cleanup windows) ------------------------
     def run_postprocess(
@@ -403,3 +444,297 @@ class ShardedCluster:
                     assert bool((owners == s).all()), (
                         f"shard {s} stores fingerprints owned by other shards"
                     )
+
+    # -- elastic resharding --------------------------------------------------------
+    def resize(
+        self,
+        new_num_shards: int,
+        reconcile: bool = True,
+        engine_factory: Optional[Callable[[int], object]] = None,
+    ) -> Dict[str, object]:
+        """Grow or shrink the cluster to ``new_num_shards`` shards in place.
+
+        The migration protocol (ARCHITECTURE.md, "Elastic resharding"):
+
+        1. **Quiesce** — flush every shard's pending duplicate runs and drop
+           router-stale keys, so all LBA mappings are final.
+        2. **Re-ring** — build the new ``ConsistentHashRing`` with the same
+           vnodes/seed.  Consistent hashing's minimal-remap property means
+           the only fingerprints whose owner changes are those grabbed by
+           new shards (grow) or orphaned by removed shards (shrink).
+        3. **Migrate** — for exactly those moved fingerprints, transplant the
+           ground-truth seen-set membership, the fingerprint-cache entry
+           (capacity permitting; stale entries are dropped, mirroring the
+           TOCTOU miss rule) and every store structure (fingerprint-table
+           rows, PBA metadata, LBA mappings, refcounts, watermarks) to the
+           new owner, updating the routing directory so reads and overwrite
+           invalidation follow the key.  PBAs are globally unique, so blocks
+           move by reference without re-allocation.
+        4. **Retire** (shrink) — fully-drained shards are finished and their
+           reports parked in ``_retired_reports`` so aggregate counters
+           survive the shards' removal.
+        5. **Reconcile** — a migrated fingerprint can carry several PBAs
+           (inline misses on the old shard); target shards run a shard-local
+           post-processing pass to merge them (engines without a mid-stream
+           ``run_postprocess`` reconcile at their next idle pass / finish).
+
+        Returns migration stats, including the moved-key fraction the
+        minimal-remap property bounds (tests/test_resharding*).
+        """
+        if new_num_shards < 1:
+            raise ValueError(f"new_num_shards must be >= 1, got {new_num_shards}")
+        if self.routing != "fingerprint":
+            raise NotImplementedError(
+                "resize() requires fingerprint routing; stream-affinity "
+                "clusters would need whole-stream migration"
+            )
+        if engine_factory is not None:
+            self._engine_factory = engine_factory
+            self._engine_kwargs = None
+        # validate every shard BEFORE any state moves: a failure mid-migration
+        # would leave the cluster half-migrated under the old ring
+        for s, engine in enumerate(self.shards):
+            if _seen_set_of(engine) is None:
+                raise TypeError(
+                    f"shard {s} engine {type(engine).__name__} exposes no "
+                    "ground-truth seen set; resize supports the built-in "
+                    "engine types"
+                )
+        old_num = self.num_shards
+        stats: Dict[str, object] = {
+            "old_num_shards": old_num,
+            "new_num_shards": new_num_shards,
+            "moved_fps": 0,
+            "moved_blocks": 0,
+            "moved_cache_entries": 0,
+            "key_population": 0,
+            "moved_fraction": 0.0,
+            "reconciled_shards": [],
+        }
+        if new_num_shards == old_num:
+            return stats
+
+        # 1. quiesce: every mapping final before anything moves
+        for engine in self.shards:
+            engine_finish_replay(engine)
+        self._invalidate_stale_keys()
+
+        # 2. re-ring (+ fresh engines for grown shard slots)
+        new_ring = ConsistentHashRing(new_num_shards, vnodes=self._vnodes, seed=self._seed)
+        for j in range(old_num, new_num_shards):
+            self.shards.append(self._make_shard_engine(j))
+
+        # 3. migrate moved fingerprints (seen-set membership is the key
+        # population: it covers live *and* freed content, and future
+        # ground-truth dup accounting needs both)
+        targets_touched = set()
+        for s in range(old_num):
+            src = self.shards[s]
+            fps = sorted(_seen_set_of(src) | set(src.store.fp_table))
+            stats["key_population"] += len(fps)
+            if not fps:
+                continue
+            owners = new_ring.shard_of_many(np.asarray(fps, dtype=np.uint64))
+            src.store._ensure_reverse()
+            src_targets = set()
+            for fp, t in zip(fps, owners.tolist()):
+                if t == s:
+                    continue
+                dst = self.shards[t]
+                moved_blocks, moved_cache = _migrate_fp(src, dst, fp, self._directory, t)
+                stats["moved_fps"] += 1
+                stats["moved_blocks"] += moved_blocks
+                stats["moved_cache_entries"] += moved_cache
+                if moved_blocks:
+                    src_targets.add(t)
+            if src.store._ever_freed:
+                # conservative: targets inheriting blocks from a freed-history
+                # source keep the TOCTOU revalidation on (it only costs the
+                # staged fast path, never correctness); sources that never
+                # freed leave their targets' fast path intact
+                for t in src_targets:
+                    self.shards[t].store._ever_freed = True
+            targets_touched |= src_targets
+        for t in targets_touched:
+            store = self.shards[t].store
+            store.peak_blocks = max(store.peak_blocks, store.live_blocks)
+
+        # single-shard fast path never populates the routing directory (and
+        # any rows left from an earlier multi-shard era are stale): with one
+        # shard, shard 0 owns every live key, so rewrite its rows before the
+        # cluster starts consulting them again
+        if old_num == 1:
+            directory = self._directory
+            for stream, lba in self.shards[0].store.lba_map:
+                directory[(stream << _LBA_BITS) + lba] = 0
+
+        # 4. retire drained shards on shrink
+        if new_num_shards < old_num:
+            retired, self.shards = self.shards[new_num_shards:], self.shards[:new_num_shards]
+            for engine in retired:
+                assert engine.store.live_blocks == 0, "retired shard not fully drained"
+                self._retired_reports.append(engine.finish())
+
+        self.ring = new_ring
+        self.num_shards = new_num_shards
+        if stats["key_population"]:
+            stats["moved_fraction"] = stats["moved_fps"] / stats["key_population"]
+
+        # 5. reconcile duplicates that crossed shard boundaries
+        if reconcile:
+            for t in sorted(targets_touched):
+                engine = self.shards[t]
+                if hasattr(engine, "run_postprocess"):
+                    engine.run_postprocess()
+                    stats["reconciled_shards"].append(t)
+        return stats
+
+    # -- snapshot/restore ----------------------------------------------------------
+    def snapshot(self) -> dict:
+        """Cluster state tree: per-shard engine trees (each in its own
+        versioned envelope), the routing directory, and the reports of
+        retired shards.  The ring is a pure function of (num_shards, vnodes,
+        seed) and is rebuilt on restore."""
+        from .snapshot import report_to_tree, snapshot_engine
+
+        return {
+            "config": {
+                "num_shards": self.num_shards,
+                "routing": self.routing,
+                "vnodes": self._vnodes,
+                "seed": self._seed,
+                "pba_stride": self._pba_stride,
+                "engine_kwargs": self._engine_kwargs,
+            },
+            "shards": [snapshot_engine(engine) for engine in self.shards],
+            "directory": [[k, v] for k, v in self._directory.items()],
+            "retired": [report_to_tree(r) for r in self._retired_reports],
+        }
+
+    def load_snapshot(self, tree: dict) -> None:
+        """Load a snapshot into this cluster *in place* (shard engines keep
+        their identity, so wired-up hooks like ``BlockStore.on_free``
+        survive).  Shard count and engine kinds must match; use
+        ``ShardedCluster.restore`` for a from-scratch rebuild."""
+        from .snapshot import load_engine_state, report_from_tree
+
+        config = tree["config"]
+        if config["num_shards"] != self.num_shards:
+            raise ValueError(
+                f"snapshot has {config['num_shards']} shards but this cluster "
+                f"has {self.num_shards}; restore with ShardedCluster.restore"
+            )
+        if (config["routing"], config["vnodes"], config["seed"]) != (
+            self.routing,
+            self._vnodes,
+            self._seed,
+        ):
+            raise ValueError("snapshot ring parameters differ from this cluster's")
+        for engine, engine_tree in zip(self.shards, tree["shards"]):
+            load_engine_state(engine, engine_tree)
+        self._directory = {int(k): int(v) for k, v in tree["directory"]}
+        self._retired_reports = [report_from_tree(r) for r in tree["retired"]]
+        self.shard_reports = None
+
+    @classmethod
+    def restore(cls, tree: dict) -> "ShardedCluster":
+        from .snapshot import report_from_tree, restore_engine
+
+        config = tree["config"]
+        # shard engines come from their own snapshot trees (PBA namespaces
+        # baked in), so bypass the ctor's shard construction entirely
+        cluster = cls.__new__(cls)
+        cluster.num_shards = config["num_shards"]
+        cluster.routing = config["routing"]
+        cluster._vnodes = config["vnodes"]
+        cluster._seed = config["seed"]
+        cluster._pba_stride = config["pba_stride"]
+        if config["engine_kwargs"] is not None:
+            engine_kwargs, seed = dict(config["engine_kwargs"]), config["seed"]
+            cluster._engine_kwargs = engine_kwargs
+            cluster._engine_factory = lambda shard: HPDedup(seed=seed + shard, **engine_kwargs)
+        else:
+            # custom-factory cluster: only a later grow needs the factory
+            # again (resize() accepts one)
+            cluster._engine_kwargs = None
+            cluster._engine_factory = None
+        cluster.ring = ConsistentHashRing(
+            cluster.num_shards, vnodes=cluster._vnodes, seed=cluster._seed
+        )
+        cluster.shards = [restore_engine(t) for t in tree["shards"]]
+        cluster._directory = {int(k): int(v) for k, v in tree["directory"]}
+        cluster._retired_reports = [report_from_tree(r) for r in tree["retired"]]
+        cluster.shard_reports = None
+        return cluster
+
+
+def _seen_set_of(engine) -> Optional[set]:
+    """The engine's ground-truth seen-fingerprint set (None if unknown)."""
+    for attr in ("_seen_fps", "_seen"):
+        seen = getattr(engine, attr, None)
+        if isinstance(seen, set):
+            return seen
+    return None
+
+
+def _cache_of(engine):
+    """The engine's fingerprint cache frontend (None for PurePostProcessing)."""
+    inline = getattr(engine, "inline", None)
+    if inline is not None:
+        return inline.cache
+    return getattr(engine, "cache", None)
+
+
+def _migrate_fp(src, dst, fp: int, directory: Dict[int, int], t: int):
+    """Move one fingerprint's whole footprint from shard ``src`` to ``dst``.
+
+    Caller must have quiesced both engines (no pending runs, no staged
+    writes) and ensured ``src.store``'s reverse index is fresh.  Returns
+    ``(blocks_moved, cache_entries_moved)``.
+    """
+    src_store, dst_store = src.store, dst.store
+
+    # ground-truth seen membership follows the fingerprint's new owner
+    src_seen, dst_seen = _seen_set_of(src), _seen_set_of(dst)
+    if src_seen is not None and fp in src_seen:
+        src_seen.discard(fp)
+        if dst_seen is not None:
+            dst_seen.add(fp)
+
+    # cache entry: validate against the (still-source-resident) store first —
+    # a stale pair (PBA freed or re-fingerprinted) is dropped, exactly like
+    # the inline TOCTOU rule treats stale hits as misses
+    moved_cache = 0
+    src_cache, dst_cache = _cache_of(src), _cache_of(dst)
+    if src_cache is not None and hasattr(src_cache, "evict_fp"):
+        owner_stream = getattr(src_cache, "owner", {}).get(fp, 0)
+        pba = src_cache.evict_fp(fp)
+        if (
+            pba is not None
+            and dst_cache is not None
+            and src_store.fp_of_pba.get(pba) == fp
+            and dst_cache.migrate_in(owner_stream, fp, pba)
+        ):
+            moved_cache = 1
+
+    pbas = src_store.fp_table.pop(fp, None)
+    if not pbas:
+        return 0, moved_cache
+    for pba in pbas:
+        keys = src_store.lbas_of_pba.pop(pba, set())
+        dst_store.fp_of_pba[pba] = fp
+        dst_store.refcount[pba] = src_store.refcount.pop(pba)
+        del src_store.fp_of_pba[pba]
+        src_store.live_blocks -= 1
+        dst_store.live_blocks += 1
+        src_store.buffer.invalidate(pba)
+        for key in keys:
+            del src_store.lba_map[key]
+            dst_store.lba_map[key] = pba
+            directory[(key[0] << _LBA_BITS) + key[1]] = t
+            if key[1] >= dst_store._lba_watermark.get(key[0], 0):
+                dst_store._lba_watermark[key[0]] = key[1] + 1
+        if not dst_store._reverse_dirty:
+            dst_store.lbas_of_pba[pba] = set(keys)
+    dst_store.fp_table.setdefault(fp, []).extend(pbas)
+    return len(pbas), moved_cache

@@ -68,6 +68,22 @@ class HPDedup:
         """``postprocess_period``: if > 0, run a post-processing pass every
         that many writes (interleaved idle-time model); 0 defers it to the
         end of replay."""
+        # full constructor config: snapshots embed it so ``restore`` can
+        # rebuild an identically-parameterized engine before loading state
+        self._config = dict(
+            cache_entries=cache_entries,
+            policy=policy,
+            sampling_rate=sampling_rate,
+            interval_factor=interval_factor,
+            adaptive_threshold=adaptive_threshold,
+            fixed_threshold=fixed_threshold,
+            prioritized=prioritized,
+            use_jax_estimator=use_jax_estimator,
+            use_unseen=use_unseen,
+            postprocess_period=postprocess_period,
+            data_buffer_blocks=data_buffer_blocks,
+            seed=seed,
+        )
         self.store = BlockStore(data_buffer_blocks=data_buffer_blocks)
         self.inline = InlineDedupEngine(
             self.store,
@@ -148,6 +164,37 @@ class HPDedup:
             elif hasattr(self.inline.cache, "cache") and fp in self.inline.cache.cache:
                 self.inline.cache.cache.insert(fp, pba)
         self._writes_since_post = 0
+
+    # -- snapshot/restore ---------------------------------------------------------
+    def snapshot(self) -> dict:
+        """JSON-safe state tree; valid at any batch boundary (pending runs
+        included).  ``core.snapshot.snapshot_engine`` wraps it in the
+        versioned envelope."""
+        return {
+            "config": dict(self._config),
+            "store": self.store.snapshot(),
+            "inline": self.inline.snapshot(),
+            "post_metrics": self.post.metrics.snapshot(),
+            "writes_since_post": self._writes_since_post,
+            "total_writes": self._total_writes,
+            "dup_writes": self._dup_writes,
+            "seen_fps": sorted(self._seen_fps),
+        }
+
+    def load_snapshot(self, tree: dict) -> None:
+        self.store.load_snapshot(tree["store"])
+        self.inline.load_snapshot(tree["inline"])
+        self.post.metrics = PostProcessMetrics.from_snapshot(tree["post_metrics"])
+        self._writes_since_post = int(tree["writes_since_post"])
+        self._total_writes = int(tree["total_writes"])
+        self._dup_writes = int(tree["dup_writes"])
+        self._seen_fps = set(int(fp) for fp in tree["seen_fps"])
+
+    @classmethod
+    def restore(cls, tree: dict) -> "HPDedup":
+        engine = cls(**tree["config"])
+        engine.load_snapshot(tree)
+        return engine
 
     # -- reporting --------------------------------------------------------------------
     def finish(self, run_post_to_exact: bool = True) -> HybridReport:

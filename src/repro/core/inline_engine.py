@@ -18,6 +18,7 @@ from typing import Dict, List, Optional, Tuple
 
 from .cache import GlobalCache, PrioritizedCache
 from .ldss import StreamLocalityEstimator
+from .statetree import from_pairs, pairs
 from .store import BlockStore
 from .threshold import SpatialThreshold
 
@@ -37,6 +38,31 @@ class InlineMetrics:
         """Paper's 'inline deduplication ratio': share of duplicate writes
         identified inline."""
         return self.inline_dups / total_dup_writes if total_dup_writes else 0.0
+
+    def snapshot(self) -> dict:
+        return {
+            "writes": self.writes,
+            "reads": self.reads,
+            "inline_dups": self.inline_dups,
+            "cache_hits": self.cache_hits,
+            "broken_runs": self.broken_runs,
+            "cache_inserted": self.cache_inserted,
+            "per_stream_dups": pairs(self.per_stream_dups),
+            "per_stream_writes": pairs(self.per_stream_writes),
+        }
+
+    @classmethod
+    def from_snapshot(cls, tree: dict) -> "InlineMetrics":
+        return cls(
+            writes=int(tree["writes"]),
+            reads=int(tree["reads"]),
+            inline_dups=int(tree["inline_dups"]),
+            cache_hits=int(tree["cache_hits"]),
+            broken_runs=int(tree["broken_runs"]),
+            cache_inserted=int(tree["cache_inserted"]),
+            per_stream_dups=from_pairs(tree["per_stream_dups"], value=int),
+            per_stream_writes=from_pairs(tree["per_stream_writes"], value=int),
+        )
 
 
 @dataclass
@@ -187,3 +213,33 @@ class InlineDedupEngine:
             if length:
                 self.thresholds.record_read_run(stream, length)
         self._read_runs.clear()
+
+    # -- snapshot/restore ----------------------------------------------------------
+    def snapshot(self) -> dict:
+        """Inline-phase state mid-replay: pending duplicate runs and open
+        read runs are captured in insertion order — a restored engine flushes
+        them in the same order the live one would have, so PBA allocation and
+        eviction draws stay bit-identical."""
+        return {
+            "metrics": self.metrics.snapshot(),
+            "cache": self.cache.snapshot(),
+            "estimator": None if self.estimator is None else self.estimator.state_dict(),
+            "thresholds": self.thresholds.snapshot(),
+            "pending": [
+                [s, run.start_lba, run.next_lba, [list(it) for it in run.items]]
+                for s, run in self._pending.items()
+            ],
+            "read_runs": [[s, nxt, length] for s, (nxt, length) in self._read_runs.items()],
+        }
+
+    def load_snapshot(self, tree: dict) -> None:
+        self.metrics = InlineMetrics.from_snapshot(tree["metrics"])
+        self.cache.load_snapshot(tree["cache"])
+        if self.estimator is not None and tree["estimator"] is not None:
+            self.estimator.load_state(tree["estimator"])
+        self.thresholds.load_snapshot(tree["thresholds"])
+        self._pending = {
+            int(s): _PendingRun(int(a), int(b), [(int(l), int(f), int(p)) for l, f, p in items])
+            for s, a, b, items in tree["pending"]
+        }
+        self._read_runs = {int(s): (int(nxt), int(length)) for s, nxt, length in tree["read_runs"]}

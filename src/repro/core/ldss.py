@@ -198,7 +198,7 @@ class StreamLocalityEstimator:
         self.writes_in_interval = 0
         self._interval_dups = 0
 
-    # -- checkpointable state (resumable ingest pipeline) --------------------
+    # -- checkpointable state (resumable ingest pipeline + engine snapshots) --
     def state_dict(self) -> dict:
         return {
             "interval_len": self.interval_len,
@@ -209,6 +209,12 @@ class StreamLocalityEstimator:
             "predicted": dict(self.predicted),
             "interval_count": self.interval_count,
             "writes_in_interval": self.writes_in_interval,
+            # bit-exact resume needs the trigger bookkeeping too: interval
+            # dups feed the interval-factor self-tuning, last_ratio the
+            # ratio-drop trigger
+            "interval_dups": self._interval_dups,
+            "last_ratio": self._last_ratio,
+            "estimations": self.estimations,
         }
 
     def load_state(self, state: dict) -> None:
@@ -224,3 +230,7 @@ class StreamLocalityEstimator:
         self.predicted = {int(s): v for s, v in state["predicted"].items()}
         self.interval_count = state["interval_count"]
         self.writes_in_interval = state["writes_in_interval"]
+        # absent in pre-snapshot checkpoints: fall back to fresh-interval values
+        self._interval_dups = state.get("interval_dups", 0)
+        self._last_ratio = state.get("last_ratio")
+        self.estimations = state.get("estimations", 0)

@@ -25,6 +25,21 @@ class PostProcessMetrics:
     merges: int = 0
     blocks_reclaimed: int = 0
 
+    def snapshot(self) -> dict:
+        return {
+            "passes": self.passes,
+            "merges": self.merges,
+            "blocks_reclaimed": self.blocks_reclaimed,
+        }
+
+    @classmethod
+    def from_snapshot(cls, tree: dict) -> "PostProcessMetrics":
+        return cls(
+            passes=int(tree["passes"]),
+            merges=int(tree["merges"]),
+            blocks_reclaimed=int(tree["blocks_reclaimed"]),
+        )
+
 
 class PostProcessEngine:
     def __init__(self, store: BlockStore):

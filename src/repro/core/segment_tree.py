@@ -110,3 +110,28 @@ class FenwickSegments:
 
     def streams(self):
         return list(self._weights.keys())
+
+    # -- snapshot/restore ----------------------------------------------------
+    def snapshot(self) -> dict:
+        """Weights alone are not enough: a draw walks the tree in *slot*
+        order, so the stream->slot assignment and the free-slot stack must
+        restore exactly for future draws to pick identical victims."""
+        return {
+            "size": self._size,
+            "weights": [[s, self._weights[s]] for s in self._slot_of],
+            "slot_of": [[s, slot] for s, slot in self._slot_of.items()],
+            "free": list(self._free),
+        }
+
+    @classmethod
+    def from_snapshot(cls, tree: dict) -> "FenwickSegments":
+        seg = cls(int(tree["size"]))
+        seg._free = [int(x) for x in tree["free"]]
+        weights = {int(s): float(w) for s, w in tree["weights"]}
+        for s, slot in tree["slot_of"]:
+            s, slot = int(s), int(slot)
+            seg._slot_of[s] = slot
+            seg._stream_of[slot] = s
+            seg._weights[s] = weights[s]
+            seg._add(slot, weights[s])
+        return seg

@@ -18,6 +18,8 @@ from __future__ import annotations
 from collections import OrderedDict
 from typing import Callable, Dict, List, Optional, Tuple
 
+from .statetree import from_kv3, from_pairs, kv3, pairs
+
 
 class DLRUBuffer:
     """D-LRU staging buffer (CacheDedup's D-LRU, used for the SSD data buffer):
@@ -44,6 +46,17 @@ class DLRUBuffer:
 
     def invalidate(self, pba: int) -> None:
         self._lru.pop(pba, None)
+
+    # -- snapshot/restore ------------------------------------------------------
+    def snapshot(self) -> dict:
+        return {"capacity": self.capacity, "lru": list(self._lru), "hits": self.hits,
+                "misses": self.misses}
+
+    def load_snapshot(self, tree: dict) -> None:
+        self.capacity = int(tree["capacity"])
+        self._lru = OrderedDict((int(p), None) for p in tree["lru"])
+        self.hits = int(tree["hits"])
+        self.misses = int(tree["misses"])
 
 
 class BlockStore:
@@ -275,6 +288,51 @@ class BlockStore:
                 self._free(p)
                 reclaimed += 1
         return reclaimed
+
+    # -- snapshot/restore ----------------------------------------------------------
+    def snapshot(self) -> dict:
+        """Full store state as a JSON-safe tree (see ``core.snapshot``).
+
+        Valid at any batch boundary: staged columnar writes are flushed first
+        (idempotent) so the deferred accounting is folded in.  The reverse
+        LBA index is *not* serialized — it is a pure function of ``lba_map``
+        and is rebuilt lazily after restore.  The ``on_free`` reclaim hook is
+        process-local and must be re-attached by its owner (the serving
+        layer does this in ``DedupKVServer.load_state``).
+        """
+        self.flush_staged()
+        return {
+            "lba_map": kv3(self.lba_map),
+            "fp_table": [[fp, list(pbas)] for fp, pbas in self.fp_table.items()],
+            "refcount": pairs(self.refcount),
+            "fp_of_pba": pairs(self.fp_of_pba),
+            "next_pba": self._next_pba,
+            "live_blocks": self.live_blocks,
+            "peak_blocks": self.peak_blocks,
+            "disk_writes": self.disk_writes,
+            "freed_blocks": self.freed_blocks,
+            "ever_freed": self._ever_freed,
+            "lba_watermark": pairs(self._lba_watermark),
+            "buffer": self.buffer.snapshot(),
+        }
+
+    def load_snapshot(self, tree: dict) -> None:
+        self.lba_map = from_kv3(tree["lba_map"])
+        self.fp_table = {int(fp): [int(p) for p in pbas] for fp, pbas in tree["fp_table"]}
+        self.refcount = from_pairs(tree["refcount"], value=int)
+        self.fp_of_pba = from_pairs(tree["fp_of_pba"], value=int)
+        self._next_pba = int(tree["next_pba"])
+        self.live_blocks = int(tree["live_blocks"])
+        self.peak_blocks = int(tree["peak_blocks"])
+        self.disk_writes = int(tree["disk_writes"])
+        self.freed_blocks = int(tree["freed_blocks"])
+        self._ever_freed = bool(tree["ever_freed"])
+        self._lba_watermark = from_pairs(tree["lba_watermark"], value=int)
+        self.buffer.load_snapshot(tree["buffer"])
+        self._staged_writes = []
+        self._staged_dups = []
+        self.lbas_of_pba = {}
+        self._reverse_dirty = True  # rebuilt lazily from lba_map
 
     # -- invariants (used by property tests) --------------------------------------
     def lookup_fp(self, fp: int) -> Optional[int]:

@@ -17,6 +17,8 @@ from typing import Dict
 
 import numpy as np
 
+from .statetree import from_pairs, pairs
+
 VEC_LEN = 64
 INITIAL_THRESHOLD = 16
 
@@ -103,3 +105,26 @@ class SpatialThreshold:
 
     def update_all(self) -> Dict[int, int]:
         return {s: self.update(s) for s in list(self.threshold.keys())}
+
+    # -- snapshot/restore ------------------------------------------------------
+    def snapshot(self) -> dict:
+        return {
+            "v_w": [[s, v.tolist()] for s, v in self.v_w.items()],
+            "v_r": [[s, v.tolist()] for s, v in self.v_r.items()],
+            "threshold": pairs(self.threshold),
+            "reads": pairs(self.reads),
+            "writes": pairs(self.writes),
+            "dups": pairs(self.dups),
+            "ratio_at_update": pairs(self._ratio_at_update),
+            "updates": self.updates,
+        }
+
+    def load_snapshot(self, tree: dict) -> None:
+        self.v_w = {int(s): np.asarray(v, dtype=np.int64) for s, v in tree["v_w"]}
+        self.v_r = {int(s): np.asarray(v, dtype=np.int64) for s, v in tree["v_r"]}
+        self.threshold = from_pairs(tree["threshold"], value=float)
+        self.reads = from_pairs(tree["reads"], value=int)
+        self.writes = from_pairs(tree["writes"], value=int)
+        self.dups = from_pairs(tree["dups"], value=int)
+        self._ratio_at_update = from_pairs(tree["ratio_at_update"], value=float)
+        self.updates = int(tree["updates"])

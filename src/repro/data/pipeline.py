@@ -20,7 +20,7 @@ from typing import Dict, Iterator, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from repro.core import HPDedup, ShardedCluster
+from repro.core import HPDedup, ShardedCluster, load_engine_state, snapshot_engine
 from repro.kernels.ops import fingerprint_ints
 
 
@@ -123,8 +123,13 @@ class DedupIngestPipeline:
         postprocess_every_blocks: int = 4096,
         token_skew: float = 1.2,
         num_shards: int = 1,
+        snapshot_every_blocks: int = 0,
         seed: int = 0,
     ):
+        """``snapshot_every_blocks``: if > 0, refresh ``last_snapshot`` (a
+        full, JSON-serializable pipeline state tree) every that many ingested
+        blocks, so a crashed ingest run resumes from the last snapshot with
+        bit-identical batches (tests/test_snapshot_restore.py)."""
         self.block_tokens = block_tokens
         self.vocab = vocab
         self.fingerprint_batch = fingerprint_batch
@@ -167,6 +172,10 @@ class DedupIngestPipeline:
         self.block_content: Dict[int, np.ndarray] = {}
         self._lba: Dict[int, int] = {}  # per-tenant next logical block address
         self._fifo = np.zeros(0, dtype=np.int32)  # admitted tokens awaiting batching
+        # periodic crash-recovery snapshots (see ctor docstring)
+        self.snapshot_every_blocks = snapshot_every_blocks
+        self.last_snapshot: Optional[dict] = None
+        self._blocks_at_snapshot = 0
 
     # -- ingest ----------------------------------------------------------------
     def _ingest_chunk(self) -> List[Tuple[int, np.ndarray, int]]:
@@ -210,6 +219,12 @@ class DedupIngestPipeline:
             admitted_blocks.append(block)
         if admitted_blocks:
             self._fifo = np.concatenate([self._fifo, *admitted_blocks])
+        if (
+            self.snapshot_every_blocks
+            and self.metrics.blocks_in - self._blocks_at_snapshot >= self.snapshot_every_blocks
+        ):
+            self.last_snapshot = self.state_dict()
+            self._blocks_at_snapshot = self.metrics.blocks_in
 
     def next_batch(self, batch_size: int, seq_len: int) -> Dict[str, np.ndarray]:
         need = batch_size * (seq_len + 1)
@@ -240,6 +255,11 @@ class DedupIngestPipeline:
             "lba": dict(self._lba),
             "rng": self.rng.bit_generator.state,
             "streams": {tid: s.state_dict() for tid, s in self.streams.items()},
+            # full engine state tree: caches, LDSS estimators + reservoir
+            # RNGs, spatial thresholds, block store(s) and pending runs —
+            # a restored pipeline's dedup decisions are bit-identical
+            "engine": snapshot_engine(self.engine),
+            # estimator-only view kept for pre-snapshot checkpoint readers
             "estimator": [est.state_dict() if est else None for est in self._estimators()],
             "metrics": dataclasses.asdict(self.metrics),
         }
@@ -250,16 +270,20 @@ class DedupIngestPipeline:
         self.rng.bit_generator.state = st["rng"]
         for tid, s in st["streams"].items():
             self.streams[int(tid)].load_state(s)
-        est_states = st["estimator"]
-        if isinstance(est_states, dict) or est_states is None:
-            est_states = [est_states]  # legacy single-engine checkpoints
-        estimators = self._estimators()
-        if len(est_states) != len(estimators):
-            raise ValueError(
-                f"checkpoint has {len(est_states)} shard estimator state(s) but this "
-                f"pipeline has {len(estimators)} — restore with the same num_shards"
-            )
-        for est, est_st in zip(estimators, est_states):
-            if est is not None and est_st:
-                est.load_state(est_st)
+        if "engine" in st:
+            load_engine_state(self.engine, st["engine"])
+        else:
+            # legacy checkpoint: only estimator state was persisted
+            est_states = st["estimator"]
+            if isinstance(est_states, dict) or est_states is None:
+                est_states = [est_states]  # legacy single-engine checkpoints
+            estimators = self._estimators()
+            if len(est_states) != len(estimators):
+                raise ValueError(
+                    f"checkpoint has {len(est_states)} shard estimator state(s) but this "
+                    f"pipeline has {len(estimators)} — restore with the same num_shards"
+                )
+            for est, est_st in zip(estimators, est_states):
+                if est is not None and est_st:
+                    est.load_state(est_st)
         self.metrics = PipelineMetrics(**st["metrics"])

@@ -27,7 +27,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import HPDedup, ShardedCluster
+from repro.core import HPDedup, ShardedCluster, load_engine_state, snapshot_engine
 from repro.kernels.ops import fingerprint_ints
 
 
@@ -233,6 +233,47 @@ class DedupKVServer:
             tok = jnp.full((1, 1), nxt, jnp.int32)
             pos += 1
         return out, cache
+
+    # -- snapshot/restore --------------------------------------------------------
+    def snapshot(self, include_pages: bool = True) -> dict:
+        """Crash-recovery state for the serving layer.
+
+        The dedup engine state is the JSON-safe versioned tree from
+        ``core.snapshot``; KV page payloads (pytrees of device arrays) are
+        host-staged as numpy arrays, so the full snapshot is picklable but
+        not JSON (pass ``include_pages=False`` for a JSON-only tree — a
+        restored server then re-prefills pages lazily on first miss, losing
+        only prefill-skip savings, never correctness).
+        """
+        return {
+            "engine": snapshot_engine(self.dedup),
+            "request_counter": self._request_counter,
+            "metrics": dataclasses.asdict(self.metrics),
+            "pages": (
+                [[pba, jax.tree.map(np.asarray, page)] for pba, page in self.pages.items()]
+                if include_pages
+                else None
+            ),
+        }
+
+    def load_state(self, tree: dict) -> None:
+        """Restore into this server in place (model/params/config unchanged).
+
+        The stores' ``on_free`` reclaim hooks are process-local, so they are
+        re-attached here rather than serialized.
+        """
+        load_engine_state(self.dedup, tree["engine"])
+        self._request_counter = int(tree["request_counter"])
+        self.metrics = ServeMetrics(**tree["metrics"])
+        self._freed_pbas.clear()
+        for engine in self._engines():
+            engine.store.on_free = self._freed_pbas.append
+        if tree["pages"] is None:
+            self.pages = {}
+        else:
+            self.pages = {
+                int(pba): jax.tree.map(jnp.asarray, page) for pba, page in tree["pages"]
+            }
 
     def run_postprocess(self) -> int:
         """Background exact pass: merge duplicate pages the cache missed.

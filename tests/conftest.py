@@ -4,3 +4,21 @@ import sys
 # Tests must see exactly ONE device (the dry-run alone fakes 512); keep jax
 # imports lazy to the first test so no global XLA_FLAGS leak here.
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+# Centralized hypothesis profiles (test hygiene, ISSUE 4): property tests use
+# bare @given and inherit the profile instead of scattering per-file
+# @settings.  ``dev`` favors fresh examples locally; ``ci`` derandomizes so
+# CI runs are reproducible and prints the failure blob for replays.  Both
+# disable the deadline — differential replays legitimately take long on
+# shared runners.  Hypothesis stays optional (pytest.importorskip guards the
+# property files), so this block must not require it.
+try:
+    from hypothesis import settings
+except ImportError:
+    pass
+else:
+    settings.register_profile("dev", max_examples=50, deadline=None)
+    settings.register_profile(
+        "ci", max_examples=50, deadline=None, derandomize=True, print_blob=True
+    )
+    settings.load_profile("ci" if os.environ.get("CI") else "dev")

@@ -4,7 +4,7 @@ import numpy as np
 import pytest
 
 pytest.importorskip("hypothesis")
-from hypothesis import given, settings, strategies as st
+from hypothesis import given, strategies as st
 
 from repro.core.cache import ARCCache, GlobalCache, LFUCache, LRUCache, PrioritizedCache
 
@@ -36,7 +36,6 @@ def test_arc_adapts_and_bounds():
 
 
 @given(st.lists(st.tuples(st.integers(0, 3), st.integers(0, 40)), min_size=1, max_size=400))
-@settings(max_examples=40, deadline=None)
 def test_prioritized_cache_capacity_invariant(ops):
     cache = PrioritizedCache(capacity=16, policy="lru")
     cache.set_ldss({0: 100.0, 1: 10.0, 2: 1.0, 3: 50.0})

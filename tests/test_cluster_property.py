@@ -18,7 +18,7 @@ import numpy as np
 import pytest
 
 pytest.importorskip("hypothesis")
-from hypothesis import given, settings, strategies as st
+from hypothesis import given, strategies as st
 
 from repro.core import HPDedup, ShardedCluster
 from repro.core.fingerprint import TRACE_DTYPE
@@ -43,7 +43,6 @@ def _trace(ops) -> np.ndarray:
 
 
 @given(ops_strategy, st.sampled_from([1, 2, 4, 8]), st.sampled_from([1, 16, 64]))
-@settings(max_examples=40, deadline=None)
 def test_cluster_differential_random_traces(ops, num_shards, batch_size):
     trace = _trace(ops)
     oracle = HPDedup(cache_entries=16)

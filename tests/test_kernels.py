@@ -6,7 +6,7 @@ import numpy as np
 import pytest
 
 pytest.importorskip("hypothesis")
-from hypothesis import given, settings, strategies as st
+from hypothesis import given, strategies as st
 
 from repro.core.ffh import ffh_from_counts
 from repro.kernels.ops import ffh_counts, fingerprint_blocks, fingerprint_ints
@@ -45,7 +45,6 @@ def test_fingerprint_matches_numpy_golden():
 
 
 @given(st.integers(0, 2**32 - 1), st.integers(0, 127))
-@settings(max_examples=30, deadline=None)
 def test_fingerprint_bit_sensitivity(value, pos):
     x = np.full((2, 128), value, dtype=np.uint32)
     x[1, pos] ^= 1  # flip one bit in one word
@@ -80,7 +79,6 @@ def test_ffh_kernel_sweep(n, nbins):
 
 
 @given(st.lists(st.integers(1, 60), min_size=1, max_size=200))
-@settings(max_examples=30, deadline=None)
 def test_ffh_kernel_property(counts):
     c = np.asarray(counts, dtype=np.int32)
     hk = np.asarray(ffh_counts(c, 40))

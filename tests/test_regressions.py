@@ -1,10 +1,18 @@
-"""Deterministic regressions for bugs found during development."""
+"""Deterministic regressions for bugs found during development, plus the
+golden-report fixtures that pin every engine's full ``HybridReport`` on a
+canned trace (semantic drift in future refactors fails loudly here)."""
+
+import json
+import os
 
 import numpy as np
+import pytest
 
 from repro.core import HPDedup
 from repro.core.ldss import StreamLocalityEstimator
 from repro.core.store import BlockStore, DLRUBuffer
+
+GOLDEN_DIR = os.path.join(os.path.dirname(__file__), "golden")
 
 
 def test_toctou_stale_pba_in_pending_run():
@@ -84,3 +92,65 @@ def test_dlru_buffer_divergence_is_out_of_contract():
     assert (s_buf.hits, s_buf.misses) != (b_buf.hits, b_buf.misses)
     # ...and it is contained: every report field still matches bit-for-bit
     assert scalar.finish() == batched.finish()
+
+
+# ---------------------------------------------------------------------------
+# Golden-report regression fixtures (ISSUE 4).
+#
+# tests/golden/report_<engine>.json pins the full HybridReport of each engine
+# on a canned trace — every metric field, not just the exactness-invariant
+# counts.  A legitimate semantic change (e.g. a new cache heuristic) must
+# regenerate the fixtures *deliberately* (see the regen snippet below) and
+# explain the diff in review; an accidental drift fails here first.
+#
+# Regenerate with:
+#   PYTHONPATH=src python - <<'PY'
+#   import json
+#   from repro.core import report_to_tree
+#   from tests.test_regressions import GOLDEN_ENGINES, golden_trace
+#   for name, mk in GOLDEN_ENGINES.items():
+#       e = mk(); e.replay(golden_trace()); t = report_to_tree(e.finish())
+#       json.dump(t, open(f"tests/golden/report_{name}.json", "w"),
+#                 indent=2, sort_keys=True)
+#   PY
+# ---------------------------------------------------------------------------
+
+
+def golden_trace():
+    from repro.core import generate_workload
+
+    return generate_workload("B", total_requests=4_000, seed=23)[0]
+
+
+def _golden_engines():
+    from repro.core import DIODE, PurePostProcessing, make_idedup
+
+    return {
+        "hpdedup": lambda: HPDedup(cache_entries=512),
+        "idedup": lambda: make_idedup(cache_entries=512),
+        "diode": lambda: DIODE(cache_entries=512),
+        "postproc": lambda: PurePostProcessing(),
+    }
+
+
+GOLDEN_ENGINES = _golden_engines()
+
+
+@pytest.mark.parametrize("name", sorted(GOLDEN_ENGINES))
+def test_golden_report_fixtures(name):
+    from repro.core import report_from_tree, report_to_tree
+
+    with open(os.path.join(GOLDEN_DIR, f"report_{name}.json")) as f:
+        golden_tree = json.load(f)
+    trace = golden_trace()
+
+    scalar = GOLDEN_ENGINES[name]()
+    scalar.replay(trace)
+    scalar_rep = scalar.finish()
+    # scalar path matches the committed fixture field for field...
+    assert report_to_tree(scalar_rep) == report_to_tree(report_from_tree(golden_tree))
+    assert scalar_rep == report_from_tree(golden_tree)
+    # ...and the batched path still matches the scalar contract on it
+    batched = GOLDEN_ENGINES[name]()
+    batched.replay_batched(trace, batch_size=512)
+    assert batched.finish() == scalar_rep

@@ -4,7 +4,7 @@ import numpy as np
 import pytest
 
 pytest.importorskip("hypothesis")
-from hypothesis import given, settings, strategies as st
+from hypothesis import given, strategies as st
 
 from repro.core.ffh import distinct_of_ffh, ffh_from_counts, occurrence_counts, sample_size_of_ffh
 from repro.core.reservoir import Reservoir, reservoir_indices
@@ -37,7 +37,6 @@ def test_reservoir_state_roundtrip_determinism():
 
 
 @given(st.lists(st.integers(min_value=0, max_value=50), min_size=0, max_size=300))
-@settings(max_examples=50, deadline=None)
 def test_ffh_identities(sample):
     sample = np.asarray(sample, dtype=np.uint64)
     counts = occurrence_counts(sample)

@@ -4,7 +4,7 @@ import numpy as np
 import pytest
 
 pytest.importorskip("hypothesis")
-from hypothesis import given, settings, strategies as st
+from hypothesis import given, strategies as st
 
 from repro.core.store import BlockStore
 from repro.core.hybrid import HPDedup
@@ -22,7 +22,6 @@ ops_strategy = st.lists(
 
 
 @given(ops_strategy)
-@settings(max_examples=60, deadline=None)
 def test_store_consistency_and_exactness(ops):
     store = BlockStore()
     last_write = {}
@@ -42,7 +41,6 @@ def test_store_consistency_and_exactness(ops):
 
 
 @given(ops_strategy, st.integers(1, 16), st.sampled_from(["lru", "lfu", "arc"]))
-@settings(max_examples=30, deadline=None)
 def test_hybrid_is_exact_for_any_cache(ops, cache_entries, policy):
     eng = HPDedup(cache_entries=cache_entries, policy=policy,
                   adaptive_threshold=False, fixed_threshold=1)
