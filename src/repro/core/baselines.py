@@ -257,7 +257,20 @@ class DIODE:
             "writes_since_update": self._writes_since_update,
         }
 
+    def check_snapshot_config(self, tree: dict) -> None:
+        """Raise (without mutating) if ``tree`` came from a differently-
+        parameterized engine — state would restore but live capacities/
+        policies would not."""
+        config = dict(tree["config"])
+        config["stream_templates"] = {int(s): t for s, t in config["stream_templates"]}
+        if config != self._config:
+            raise ValueError(
+                "snapshot engine config differs from this engine's; "
+                f"snapshot {config!r} vs live {self._config!r}"
+            )
+
     def load_snapshot(self, tree: dict) -> None:
+        self.check_snapshot_config(tree)
         self.store.load_snapshot(tree["store"])
         self.cache.load_snapshot(tree["cache"])
         self.metrics = InlineMetrics.from_snapshot(tree["metrics"])

@@ -59,6 +59,11 @@ class LRUCache:
         """Value without touching recency (shard-migration / snapshot probe)."""
         return self._d.get(fp)
 
+    def replace(self, fp: int, pba: int) -> None:
+        """Update a resident entry's value without touching recency."""
+        if fp in self._d:
+            self._d[fp] = pba
+
     def __contains__(self, fp: int) -> bool:
         return fp in self._d
 
@@ -132,6 +137,11 @@ class LFUCache:
         """Value without touching frequency (shard-migration / snapshot probe)."""
         return self._val.get(fp)
 
+    def replace(self, fp: int, pba: int) -> None:
+        """Update a resident entry's value without touching frequency."""
+        if fp in self._val:
+            self._val[fp] = pba
+
     def __contains__(self, fp: int) -> bool:
         return fp in self._val
 
@@ -188,7 +198,12 @@ class ARCCache:
         return None
 
     def insert(self, fp: int, pba: int) -> None:
-        if fp in self.t1 or fp in self.t2:
+        if fp in self.t1:
+            self.t1[fp] = pba  # re-insert updates the value, like LRU/LFU
+            self.lookup(fp)
+            return
+        if fp in self.t2:
+            self.t2[fp] = pba
             self.lookup(fp)
             return
         if fp in self.b1:
@@ -202,11 +217,7 @@ class ARCCache:
             self.t2[fp] = pba
             return
         self.t1[fp] = pba
-        # bound ghosts
-        while len(self.b1) > self.c:
-            self.b1.popitem(last=False)
-        while len(self.b2) > self.c:
-            self.b2.popitem(last=False)
+        self._trim_ghosts()
 
     def _trim_ghosts(self) -> None:
         while len(self.b1) > self.c:
@@ -239,6 +250,13 @@ class ARCCache:
         """Value without T1->T2 promotion (shard-migration / snapshot probe)."""
         v = self.t1.get(fp)
         return v if v is not None else self.t2.get(fp)
+
+    def replace(self, fp: int, pba: int) -> None:
+        """Update a resident entry's value without promotion or recency."""
+        if fp in self.t1:
+            self.t1[fp] = pba
+        elif fp in self.t2:
+            self.t2[fp] = pba
 
     def __contains__(self, fp: int) -> bool:
         return fp in self.t1 or fp in self.t2
@@ -337,8 +355,14 @@ class GlobalCache:
     def migrate_in(self, stream: int, fp: int, pba: int) -> bool:
         """Install a migrated entry iff capacity allows — a *move*, not an
         admission: no eviction, no ``inserted`` bump, no RNG draw."""
-        if fp in self.cache or len(self.cache) >= self.capacity:
-            return fp in self.cache
+        if fp in self.cache:
+            # the migrated PBA was just validated against the source store,
+            # so it supersedes whatever (possibly stale) value sits here —
+            # value-only: a move must not perturb recency/frequency either
+            self.cache.replace(fp, pba)
+            return True
+        if len(self.cache) >= self.capacity:
+            return False
         self.cache.insert(fp, pba)
         return True
 
@@ -527,7 +551,12 @@ class PrioritizedCache:
         admission: no admission filter, no eviction, no ``inserted`` bump,
         no RNG draw.  Dropping under pressure is safe (the cache is advisory;
         post-processing reclaims any resulting inline miss)."""
-        if fp in self.owner:
+        holder = self.owner.get(fp)
+        if holder is not None:
+            # already resident (possibly with a stale PBA): refresh with the
+            # just-validated migrated value instead of discarding it —
+            # value-only: a move must not perturb recency/frequency either
+            self.streams[holder].replace(fp, pba)
             return True
         if self.total >= self.capacity:
             return False

@@ -52,7 +52,11 @@ cluster without code changes:
 
 PBA namespaces: each shard's store allocates from a disjoint PBA range
 (``pba_stride`` apart), so physical ids stay globally unique — the serving
-layer keys KV pages by PBA across the whole cluster.
+layer keys KV pages by PBA across the whole cluster.  Namespace slots are
+handed out by a cluster-lifetime monotonic counter (persisted in snapshots)
+rather than derived from shard indices: a slot retired by a shrink may still
+have live blocks migrated onto surviving shards, so a later grow must never
+allocate from that range again.
 """
 
 from __future__ import annotations
@@ -71,6 +75,7 @@ from .fingerprint import OP_WRITE, TRACE_DTYPE
 from .hybrid import HPDedup, HybridReport
 from .inline_engine import InlineMetrics
 from .postprocess import PostProcessMetrics
+from .statetree import from_pairs, pairs
 
 # Packed (stream, lba) routing-directory keys: stream << LBA_BITS | lba.
 # 2^40 block addresses per stream (4 PiB volumes at 4 KB blocks) covers every
@@ -195,6 +200,11 @@ class ShardedCluster:
         self._seed = seed
         self._pba_stride = pba_stride
         self._engine_factory = engine_factory
+        # monotonic PBA-namespace allocator: every shard engine ever created
+        # gets its own stride slot, never reused — a slot retired by a shrink
+        # still has live blocks migrated onto surviving shards, so recreating
+        # it on a later grow must not re-allocate from its old range
+        self._next_namespace = 0
         self.ring = ConsistentHashRing(num_shards, vnodes=vnodes, seed=seed)
         self.shards: List = [self._make_shard_engine(i) for i in range(num_shards)]
         self._directory: Dict[int, int] = {}  # packed (stream, lba) -> shard
@@ -204,7 +214,8 @@ class ShardedCluster:
         self.shard_reports: Optional[List[HybridReport]] = None
 
     def _make_shard_engine(self, shard: int):
-        """Build shard ``shard``'s engine with its disjoint PBA namespace."""
+        """Build shard ``shard``'s engine in the next unused PBA namespace
+        slot (slots are cluster-lifetime-unique, not shard-index-derived)."""
         if self._engine_factory is None:
             raise ValueError(
                 "this cluster was restored from a snapshot of a custom "
@@ -212,7 +223,8 @@ class ShardedCluster:
                 "engine_factory to resize()"
             )
         engine = self._engine_factory(shard)
-        engine.store._next_pba += shard * self._pba_stride
+        engine.store._next_pba += self._next_namespace * self._pba_stride
+        self._next_namespace += 1
         return engine
 
     # -- routing -----------------------------------------------------------------
@@ -568,11 +580,24 @@ class ShardedCluster:
             for stream, lba in self.shards[0].store.lba_map:
                 directory[(stream << _LBA_BITS) + lba] = 0
 
-        # 4. retire drained shards on shrink
+        # 4. retire drained shards on shrink.  A shard leaving with live
+        # blocks means migration missed data — guard with a real exception
+        # (asserts vanish under ``python -O``).  If it fires, the cluster is
+        # already inconsistent (step 3 moved state per the new ring while
+        # ``self.ring`` is still the old one): the exception signals an
+        # unrecoverable internal invariant violation, not a clean abort.
         if new_num_shards < old_num:
+            for s in range(new_num_shards, old_num):
+                live = self.shards[s].store.live_blocks
+                if live != 0:
+                    raise RuntimeError(
+                        f"retiring shard {s} would lose {live} live blocks "
+                        "that migration failed to drain; the cluster is in "
+                        "an inconsistent half-migrated state — discard it "
+                        "and restore from the last snapshot"
+                    )
             retired, self.shards = self.shards[new_num_shards:], self.shards[:new_num_shards]
             for engine in retired:
-                assert engine.store.live_blocks == 0, "retired shard not fully drained"
                 self._retired_reports.append(engine.finish())
 
         self.ring = new_ring
@@ -604,10 +629,11 @@ class ShardedCluster:
                 "vnodes": self._vnodes,
                 "seed": self._seed,
                 "pba_stride": self._pba_stride,
+                "next_namespace": self._next_namespace,
                 "engine_kwargs": self._engine_kwargs,
             },
             "shards": [snapshot_engine(engine) for engine in self.shards],
-            "directory": [[k, v] for k, v in self._directory.items()],
+            "directory": pairs(self._directory),
             "retired": [report_to_tree(r) for r in self._retired_reports],
         }
 
@@ -616,7 +642,7 @@ class ShardedCluster:
         their identity, so wired-up hooks like ``BlockStore.on_free``
         survive).  Shard count and engine kinds must match; use
         ``ShardedCluster.restore`` for a from-scratch rebuild."""
-        from .snapshot import load_engine_state, report_from_tree
+        from .snapshot import check_engine_compatible, report_from_tree
 
         config = tree["config"]
         if config["num_shards"] != self.num_shards:
@@ -624,15 +650,30 @@ class ShardedCluster:
                 f"snapshot has {config['num_shards']} shards but this cluster "
                 f"has {self.num_shards}; restore with ShardedCluster.restore"
             )
-        if (config["routing"], config["vnodes"], config["seed"]) != (
-            self.routing,
-            self._vnodes,
-            self._seed,
-        ):
-            raise ValueError("snapshot ring parameters differ from this cluster's")
+        if len(tree["shards"]) != self.num_shards:
+            raise ValueError(
+                f"snapshot is corrupt: config says {self.num_shards} shards "
+                f"but carries {len(tree['shards'])} shard trees"
+            )
+        if (
+            config["routing"],
+            config["vnodes"],
+            config["seed"],
+            config["pba_stride"],
+        ) != (self.routing, self._vnodes, self._seed, self._pba_stride):
+            raise ValueError(
+                "snapshot ring/namespace parameters (routing, vnodes, seed, "
+                "pba_stride) differ from this cluster's"
+            )
+        # validate every shard tree BEFORE any shard mutates (same rule as
+        # resize's pre-checks): a kind/config mismatch on shard k would
+        # otherwise leave shards 0..k-1 on snapshot state and the rest live
         for engine, engine_tree in zip(self.shards, tree["shards"]):
-            load_engine_state(engine, engine_tree)
-        self._directory = {int(k): int(v) for k, v in tree["directory"]}
+            check_engine_compatible(engine, engine_tree)
+        for engine, engine_tree in zip(self.shards, tree["shards"]):
+            engine.load_snapshot(engine_tree["state"])
+        self._next_namespace = int(config["next_namespace"])
+        self._directory = from_pairs(tree["directory"], value=int)
         self._retired_reports = [report_from_tree(r) for r in tree["retired"]]
         self.shard_reports = None
 
@@ -641,6 +682,11 @@ class ShardedCluster:
         from .snapshot import report_from_tree, restore_engine
 
         config = tree["config"]
+        if len(tree["shards"]) != config["num_shards"]:
+            raise ValueError(
+                f"snapshot is corrupt: config says {config['num_shards']} "
+                f"shards but carries {len(tree['shards'])} shard trees"
+            )
         # shard engines come from their own snapshot trees (PBA namespaces
         # baked in), so bypass the ctor's shard construction entirely
         cluster = cls.__new__(cls)
@@ -649,6 +695,7 @@ class ShardedCluster:
         cluster._vnodes = config["vnodes"]
         cluster._seed = config["seed"]
         cluster._pba_stride = config["pba_stride"]
+        cluster._next_namespace = int(config["next_namespace"])
         if config["engine_kwargs"] is not None:
             engine_kwargs, seed = dict(config["engine_kwargs"]), config["seed"]
             cluster._engine_kwargs = engine_kwargs
@@ -662,7 +709,7 @@ class ShardedCluster:
             cluster.num_shards, vnodes=cluster._vnodes, seed=cluster._seed
         )
         cluster.shards = [restore_engine(t) for t in tree["shards"]]
-        cluster._directory = {int(k): int(v) for k, v in tree["directory"]}
+        cluster._directory = from_pairs(tree["directory"], value=int)
         cluster._retired_reports = [report_from_tree(r) for r in tree["retired"]]
         cluster.shard_reports = None
         return cluster

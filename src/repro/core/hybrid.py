@@ -181,7 +181,20 @@ class HPDedup:
             "seen_fps": sorted(self._seen_fps),
         }
 
+    def check_snapshot_config(self, tree: dict) -> None:
+        """Raise (without mutating) if ``tree`` came from a differently-
+        parameterized engine: an in-place load would restore state but keep
+        the live capacities/policies, so every future decision could diverge
+        — reject loudly, like the version gate and the cluster's
+        ring-parameter check."""
+        if tree["config"] != self._config:
+            raise ValueError(
+                "snapshot engine config differs from this engine's; "
+                f"snapshot {tree['config']!r} vs live {self._config!r}"
+            )
+
     def load_snapshot(self, tree: dict) -> None:
+        self.check_snapshot_config(tree)
         self.store.load_snapshot(tree["store"])
         self.inline.load_snapshot(tree["inline"])
         self.post.metrics = PostProcessMetrics.from_snapshot(tree["post_metrics"])

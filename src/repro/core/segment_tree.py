@@ -12,6 +12,8 @@ from typing import Dict, Optional
 
 import numpy as np
 
+from .statetree import pairs
+
 
 class FenwickSegments:
     """Fenwick tree over per-stream weights with prefix-search sampling."""
@@ -115,17 +117,24 @@ class FenwickSegments:
     def snapshot(self) -> dict:
         """Weights alone are not enough: a draw walks the tree in *slot*
         order, so the stream->slot assignment and the free-slot stack must
-        restore exactly for future draws to pick identical victims."""
+        restore exactly for future draws to pick identical victims.  The raw
+        Fenwick node array is serialized verbatim too: the live nodes are
+        sums of incrementally accumulated float deltas, and float addition
+        is non-associative, so re-deriving them from the final weights can
+        differ by ULPs — enough to flip a ``draw`` near a segment boundary
+        and break bit-exact resumption."""
         return {
             "size": self._size,
-            "weights": [[s, self._weights[s]] for s in self._slot_of],
-            "slot_of": [[s, slot] for s, slot in self._slot_of.items()],
+            "tree": list(self._tree),
+            "weights": pairs(self._weights),
+            "slot_of": pairs(self._slot_of),
             "free": list(self._free),
         }
 
     @classmethod
     def from_snapshot(cls, tree: dict) -> "FenwickSegments":
         seg = cls(int(tree["size"]))
+        seg._tree = [float(x) for x in tree["tree"]]
         seg._free = [int(x) for x in tree["free"]]
         weights = {int(s): float(w) for s, w in tree["weights"]}
         for s, slot in tree["slot_of"]:
@@ -133,5 +142,4 @@ class FenwickSegments:
             seg._slot_of[s] = slot
             seg._stream_of[slot] = s
             seg._weights[s] = weights[s]
-            seg._add(slot, weights[s])
         return seg

@@ -6,7 +6,7 @@ Every engine (``HPDedup`` — including its ``make_idedup`` configuration —
 documents the encoding rules).  ``snapshot_engine`` wraps an engine's tree in
 a self-describing envelope::
 
-    {"format": "hpdedup-state-tree", "version": 1,
+    {"format": "hpdedup-state-tree", "version": 2,
      "kind": "hpdedup" | "diode" | "postproc" | "cluster",
      "state": {...}}
 
@@ -20,8 +20,10 @@ Guarantees (enforced by tests/test_snapshot_restore.py):
   uninterrupted run's.
 * **Serializability.**  ``json.dumps(tree)`` round-trips losslessly; the
   tests restore from the JSON round trip, never from the live tree.
-* **Versioning.**  ``version`` gates compatibility: trees from a newer
-  writer are rejected loudly instead of restored wrongly.
+* **Versioning.**  ``version`` gates compatibility: trees from any other
+  writer version — newer or older — are rejected loudly instead of
+  restored wrongly (an old tree lacks state the bit-exact guarantee needs,
+  e.g. the raw Fenwick node array added in version 2).
 
 ``HybridReport`` (de)serialization lives here too: golden-report regression
 fixtures (tests/golden/) and the cluster's retired-shard ledger both persist
@@ -37,7 +39,11 @@ from .inline_engine import InlineMetrics
 from .postprocess import PostProcessMetrics
 
 SNAPSHOT_FORMAT = "hpdedup-state-tree"
-SNAPSHOT_VERSION = 1
+# version 2: FenwickSegments trees carry the raw node array (version-1 trees
+# would re-derive it from weights, which can drift by ULPs and break the
+# bit-exact-resumption guarantee — so they are rejected, not fixed up), and
+# cluster configs carry the monotonic PBA-namespace counter.
+SNAPSHOT_VERSION = 2
 
 _KINDS = {
     "hpdedup": HPDedup,
@@ -86,6 +92,21 @@ def restore_engine(tree: dict):
     return _KINDS[tree["kind"]].restore(tree["state"])
 
 
+def check_engine_compatible(engine, tree: dict) -> None:
+    """Raise, without mutating ``engine``, if ``tree`` cannot load into it
+    in place: envelope format/version, engine kind, and — where the engine
+    kind embeds one — the constructor config.  ``ShardedCluster`` runs this
+    over every shard *before* loading any, so a mismatch rejects cleanly
+    instead of leaving the cluster half-restored."""
+    _check_envelope(tree)
+    kind = _kind_of(engine)
+    if kind != tree["kind"]:
+        raise ValueError(f"snapshot is for kind {tree['kind']!r}, engine is {kind!r}")
+    check = getattr(engine, "check_snapshot_config", None)
+    if check is not None:
+        check(tree["state"])
+
+
 def load_engine_state(engine, tree: dict) -> None:
     """Load a state tree into an *existing* engine in place.
 
@@ -94,10 +115,7 @@ def load_engine_state(engine, tree: dict) -> None:
     hooks, estimator callbacks — survives the restore.  The engine must be
     of the snapshotted kind (and, for clusters, shape).
     """
-    _check_envelope(tree)
-    kind = _kind_of(engine)
-    if kind != tree["kind"]:
-        raise ValueError(f"snapshot is for kind {tree['kind']!r}, engine is {kind!r}")
+    check_engine_compatible(engine, tree)
     engine.load_snapshot(tree["state"])
 
 

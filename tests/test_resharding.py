@@ -160,6 +160,57 @@ def test_resize_reconciles_cross_boundary_duplicates(trace):
         c.check_consistency()
 
 
+def test_shrink_then_grow_never_reuses_pba_namespaces(trace, oracle_report):
+    """Shrink retires a shard slot whose live blocks migrate out with their
+    PBAs intact; a later grow that recreated the slot's old PBA namespace
+    would allocate colliding ids (clobbering ``fp_of_pba``/refcounts when
+    those blocks migrate back).  Namespace slots must be lifetime-unique."""
+    cluster = ShardedCluster(num_shards=4, cache_entries=512)
+    cut1 = BATCH * 4 * 2
+    cut2 = cut1 + BATCH * 2 * 2
+    cluster.ingest_batched(trace[:cut1], BATCH)
+    cluster.resize(2)
+    cluster.ingest_batched(trace[cut1:cut2], BATCH)
+    cluster.resize(4)
+    # recreated slots 2 and 3 allocate from fresh namespaces, past every
+    # slot the cluster has ever handed out
+    assert cluster._next_namespace == 6
+    for engine in cluster.shards[2:]:
+        assert engine.store._next_pba >= 4 * cluster._pba_stride
+    cluster.ingest_batched(trace[cut2:], BATCH)
+    # global PBA uniqueness across all shard stores
+    pbas = []
+    for engine in cluster.shards:
+        engine.store.flush_staged()
+        pbas.extend(engine.store.fp_of_pba)
+    assert len(pbas) == len(set(pbas))
+    rep = cluster.finish()
+    cluster.check_consistency()
+    assert_counts_match(rep, oracle_report)
+
+
+def test_shrink_grow_chain_with_snapshot_is_bit_exact(trace):
+    """The namespace counter persists through snapshots: a restored cluster
+    growing after a shrink must continue from fresh namespace slots, and the
+    whole shrink -> snapshot -> restore -> grow chain stays bit-exact."""
+    def run(crash: bool):
+        cluster = ShardedCluster(num_shards=4, cache_entries=512)
+        cut1 = BATCH * 4 * 2
+        cluster.ingest_batched(trace[:cut1], BATCH)
+        cluster.resize(2)
+        if crash:
+            payload = json.dumps(snapshot_engine(cluster))
+            cluster = restore_engine(json.loads(payload))
+            assert cluster._next_namespace == 4
+        cut2 = cut1 + BATCH * 2 * 2
+        cluster.ingest_batched(trace[cut1:cut2], BATCH)
+        cluster.resize(4)
+        cluster.ingest_batched(trace[cut2:], BATCH)
+        return cluster.finish()
+
+    assert run(crash=True) == run(crash=False)
+
+
 def test_resize_then_snapshot_then_restore_chain(trace):
     """The PR's two tentpole halves compose: resize mid-replay, snapshot the
     resized cluster, crash, restore, finish — bit-exact against the same

@@ -160,10 +160,27 @@ def test_envelope_version_and_kind_guards():
     future = dict(tree, version=tree["version"] + 1)
     with pytest.raises(ValueError, match="version"):
         restore_engine(future)
+    # older trees are rejected too: version-1 snapshots lack state the
+    # bit-exact guarantee needs (raw Fenwick nodes, namespace counter)
+    stale = dict(tree, version=1)
+    with pytest.raises(ValueError, match="version"):
+        restore_engine(stale)
     with pytest.raises(ValueError, match="not a"):
         restore_engine({"bogus": True})
     with pytest.raises(ValueError, match="kind"):
         load_engine_state(PurePostProcessing(), tree)
+
+
+def test_load_engine_state_rejects_mismatched_config():
+    """An in-place load into a differently-parameterized engine restores
+    state under the wrong live capacities/policies and silently diverges —
+    it must be rejected loudly, like the version gate."""
+    tree = json.loads(json.dumps(snapshot_engine(HPDedup(cache_entries=8192))))
+    with pytest.raises(ValueError, match="config"):
+        load_engine_state(HPDedup(cache_entries=1024), tree)
+    diode_tree = json.loads(json.dumps(snapshot_engine(DIODE(cache_entries=256))))
+    with pytest.raises(ValueError, match="config"):
+        load_engine_state(DIODE(cache_entries=256, policy="lfu"), diode_tree)
 
 
 def test_cluster_load_snapshot_shape_guard():
@@ -172,6 +189,44 @@ def test_cluster_load_snapshot_shape_guard():
     other = ShardedCluster(num_shards=4, cache_entries=16)
     with pytest.raises(ValueError, match="shards"):
         load_engine_state(other, tree)
+    # mismatched PBA stride must be rejected too: a grow on the loaded
+    # cluster would compute namespace offsets that overlap the restored
+    # shards' allocated ranges
+    narrow = ShardedCluster(num_shards=2, cache_entries=16, pba_stride=1 << 20)
+    with pytest.raises(ValueError, match="pba_stride"):
+        load_engine_state(narrow, tree)
+
+
+def test_cluster_load_snapshot_rejects_without_mutating(trace):
+    """A per-shard config mismatch must reject BEFORE any shard loads: a
+    mid-loop failure would leave earlier shards on snapshot state and later
+    ones live — a silently inconsistent mix if the caller catches the error
+    and keeps going."""
+    donor = ShardedCluster(num_shards=2, cache_entries=32)
+    donor.ingest_batched(trace[: BATCH * 4], BATCH)
+    tree = json.loads(json.dumps(snapshot_engine(donor)))
+
+    target = ShardedCluster(num_shards=2, cache_entries=16)  # same ring params
+    target.ingest_batched(trace[BATCH * 4 : BATCH * 8], BATCH)
+    before = json.dumps(snapshot_engine(target))
+    with pytest.raises(ValueError, match="config"):
+        load_engine_state(target, tree)
+    assert json.dumps(snapshot_engine(target)) == before  # untouched
+
+    # a truncated shards list (corrupt/tampered file) passes the num_shards
+    # config check but must still reject before any shard loads
+    truncated = json.loads(json.dumps(snapshot_engine(donor)))
+    truncated["state"]["shards"] = truncated["state"]["shards"][:1]
+    matching = ShardedCluster(num_shards=2, cache_entries=32)
+    matching.ingest_batched(trace[BATCH * 4 : BATCH * 8], BATCH)
+    before = json.dumps(snapshot_engine(matching))
+    with pytest.raises(ValueError, match="corrupt"):
+        load_engine_state(matching, truncated)
+    assert json.dumps(snapshot_engine(matching)) == before  # untouched
+    # the from-scratch path must reject it too, not build a 2-shard cluster
+    # with a 1-engine shards list
+    with pytest.raises(ValueError, match="corrupt"):
+        restore_engine(truncated)
 
 
 def test_pipeline_crash_restore_continues_bit_exact():
