@@ -1,0 +1,245 @@
+"""Fingerprint-index throughput: batched table probes vs per-fp Python dicts.
+
+Two gates (ISSUE 5):
+
+* **Probe microbench** — ``FingerprintIndex.contains_many`` (the
+  device-layout table path) must beat the per-fingerprint Python path
+  (``map(set.__contains__, ...)``, exactly what the replay pre-pass did
+  before the index) on batches of >= 100k fingerprints.
+* **End-to-end replay** — with every membership probe routed through the
+  index, ``replay_batched`` throughput must not regress vs the PR 1
+  baselines recorded in ``BENCH_replay.json`` (a small noise allowance is
+  applied: this host is shared and the baseline numbers came from a
+  different run).
+
+Also reports batched insert throughput, the cluster-wide multi-shard
+``probe_fps`` launch, and the Pallas-kernel (interpret-mode) probe for
+reference.  Emits ``BENCH_fp_index.json``; exit code 1 if a gate fails.
+
+Usage:
+    python benchmarks/fp_index.py            # default scale
+    python benchmarks/fp_index.py --smoke    # CI-sized
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+from typing import Callable, List
+
+import numpy as np
+
+sys.path.insert(0, os.path.join(os.path.dirname(os.path.abspath(__file__)), "..", "src"))
+
+from repro.core import HPDedup, ShardedCluster, generate_workload
+from repro.core.fp_index import FingerprintIndex
+
+# batched-vs-baseline noise allowance for the end-to-end gate: the PR 1
+# numbers in BENCH_replay.json were measured in a different process on a
+# shared host; a real regression from the index integration would be a
+# consistent hit, not a ±10% wobble
+E2E_SLACK = 0.90
+
+
+def _time_best(fn: Callable[[], object], reps: int) -> float:
+    """Min-of-reps wall time.  ``process_time`` (the replay benches' clock)
+    has 10-20ms granularity on this host — useless for sub-20ms microbench
+    calls — so the probe benches use ``perf_counter`` and take the min over
+    several reps to shed scheduler noise."""
+    best = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def bench_probe(n_resident: int, n_probe: int, reps: int) -> List[dict]:
+    """Membership probes over a half-present/half-absent batch."""
+    rng = np.random.default_rng(0)
+    resident = np.unique(rng.integers(1, 1 << 63, size=n_resident, dtype=np.uint64))
+    absent = np.unique(rng.integers(1 << 63, 1 << 64, size=n_probe, dtype=np.uint64))
+    probe = np.concatenate([resident[: n_probe // 2], absent[: n_probe - n_probe // 2]])
+    rng.shuffle(probe)
+
+    host = set(resident.tolist())
+    idx = FingerprintIndex(resident, small_batch=0)
+    idx.contains_many(probe[:64])  # warm (flush + first launch)
+
+    # the dict baseline is the pre-index pre-pass verbatim: the fingerprints
+    # arrive as a uint64 array (columnar batch), so the per-fp Python path
+    # pays the array->list conversion before it can probe the set
+    t_dict = _time_best(
+        lambda: np.fromiter(
+            map(host.__contains__, probe.tolist()), dtype=bool, count=probe.size
+        ),
+        reps,
+    )
+    t_index = _time_best(lambda: idx.contains_many(probe), reps)
+
+    rows = [
+        {
+            "bench": "probe",
+            "resident": int(resident.size),
+            "batch": int(probe.size),
+            "dict_mps": round(probe.size / t_dict / 1e6, 2),
+            "index_mps": round(probe.size / t_index / 1e6, 2),
+            "speedup": round(t_dict / t_index, 2),
+        }
+    ]
+
+    # insert throughput: fresh keys, batched vs per-key set update
+    fresh = np.unique(rng.integers(1, 1 << 63, size=n_probe, dtype=np.uint64))
+    t_set_ins = _time_best(lambda: set().union(fresh.tolist()), reps)
+    t_idx_ins = _time_best(
+        lambda: FingerprintIndex(capacity=1 << 17, small_batch=0).add_many(fresh), reps
+    )
+    rows.append(
+        {
+            "bench": "insert",
+            "batch": int(fresh.size),
+            "set_mps": round(fresh.size / t_set_ins / 1e6, 2),
+            "index_mps": round(fresh.size / t_idx_ins / 1e6, 2),
+            "speedup": round(t_set_ins / t_idx_ins, 2),
+        }
+    )
+
+    # interpret-mode Pallas probe, for the record (the TPU path's CPU proxy;
+    # not a gate — interpret mode is a correctness harness, not a target)
+    pidx = FingerprintIndex(resident[: 1 << 14], small_batch=0, backend="pallas")
+    small = probe[: 1 << 14]
+    pidx.contains_many(small[:64])
+    t_pallas = _time_best(lambda: pidx.contains_many(small), 1)
+    rows.append(
+        {
+            "bench": "probe_pallas_interpret",
+            "resident": int(min(resident.size, 1 << 14)),
+            "batch": int(small.size),
+            "index_mps": round(small.size / t_pallas / 1e6, 3),
+        }
+    )
+    return rows
+
+
+def bench_cluster_probe(n_resident: int, n_probe: int, num_shards: int, reps: int) -> dict:
+    """One batched membership launch across all shards' seen indexes."""
+    rng = np.random.default_rng(1)
+    streams = rng.integers(0, 8, size=n_resident, dtype=np.int64)
+    lbas = np.arange(n_resident, dtype=np.int64)
+    fps = np.unique(rng.integers(1, 1 << 63, size=n_resident, dtype=np.uint64))
+    streams, lbas = streams[: fps.size], lbas[: fps.size]
+    cluster = ShardedCluster(num_shards=num_shards, cache_entries=4096)
+    cluster.write_batch(streams, lbas, fps)
+    probe = np.concatenate(
+        [fps[: n_probe // 2], rng.integers(1 << 63, 1 << 64, size=n_probe // 2, dtype=np.uint64)]
+    )
+    rng.shuffle(probe)
+    cluster.probe_fps(probe[:64])  # warm
+    t = _time_best(lambda: cluster.probe_fps(probe), reps)
+    flags = cluster.probe_fps(probe)
+    oracle = set(fps.tolist())
+    want = np.fromiter((int(k) in oracle for k in probe), dtype=bool, count=probe.size)
+    return {
+        "bench": "cluster_probe",
+        "shards": num_shards,
+        "resident": int(fps.size),
+        "batch": int(probe.size),
+        "index_mps": round(probe.size / t / 1e6, 2),
+        "exact": bool((flags == want).all()),
+    }
+
+
+def bench_e2e(requests: int, reps: int, baseline_path: str) -> List[dict]:
+    """replay_batched with index-routed probes vs the PR 1 baseline rps."""
+    baseline = {}
+    if os.path.exists(baseline_path):
+        with open(baseline_path) as f:
+            for row in json.load(f)["rows"]:
+                baseline[(row["workload"], row["engine"])] = row["batched_rps"]
+    rows = []
+    for wl in ["B"]:
+        trace, _ = generate_workload(wl, total_requests=requests, seed=0)
+        n = len(trace)
+        t = _time_best(
+            lambda: HPDedup(cache_entries=32_768).replay_batched(trace), reps
+        )
+        rps = round(n / t)
+        base = baseline.get((wl, "hpdedup"))
+        rows.append(
+            {
+                "bench": "e2e_replay",
+                "workload": wl,
+                "engine": "hpdedup",
+                "requests": n,
+                "batched_rps": rps,
+                "baseline_rps": base,
+                "ratio": None if not base else round(rps / base, 2),
+                "pass": True if not base else rps >= E2E_SLACK * base,
+            }
+        )
+    return rows
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true", help="CI-sized quick run")
+    ap.add_argument("--resident", type=int, default=200_000)
+    ap.add_argument("--probe", type=int, default=200_000)
+    ap.add_argument("--requests", type=int, default=200_000)
+    ap.add_argument("--reps", type=int, default=3)
+    ap.add_argument("--shards", type=int, default=4)
+    ap.add_argument("--baseline", default="BENCH_replay.json")
+    ap.add_argument("--out", default="BENCH_fp_index.json")
+    args = ap.parse_args(argv)
+    if args.smoke:
+        # keep the probe batch >= 100k: that scale IS the gate's contract
+        args.resident = min(args.resident, 120_000)
+        args.probe = max(min(args.probe, 120_000), 100_000)
+        args.requests = min(args.requests, 30_000)
+        args.reps = 1
+
+    # microbench reps: min-of-many wall-clock reps is the stable statistic
+    # on this shared host (the e2e bench amortizes over seconds instead)
+    micro_reps = max(args.reps, 7)
+
+    rows = bench_probe(args.resident, args.probe, micro_reps)
+    rows.append(
+        bench_cluster_probe(args.resident // 2, args.probe // 2, args.shards, micro_reps)
+    )
+    rows.extend(bench_e2e(args.requests, args.reps, args.baseline))
+
+    for r in rows:
+        print(" ".join(f"{k}={v}" for k, v in r.items()))
+
+    probe_row = rows[0]
+    gates = {
+        "probe_beats_dict_at_100k": probe_row["batch"] >= 100_000
+        and probe_row["speedup"] > 1.0,
+        "cluster_probe_exact": all(
+            r.get("exact", True) for r in rows if r["bench"] == "cluster_probe"
+        ),
+        "e2e_no_regression": all(r["pass"] for r in rows if r["bench"] == "e2e_replay"),
+    }
+    payload = {
+        "meta": {
+            "resident": args.resident,
+            "probe_batch": args.probe,
+            "requests": args.requests,
+            "reps": args.reps,
+            "e2e_slack": E2E_SLACK,
+            "gates": gates,
+        },
+        "rows": rows,
+    }
+    with open(args.out, "w") as f:
+        json.dump(payload, f, indent=2)
+    print(f"\ngates: {gates}")
+    print(f"wrote {args.out}")
+    return 0 if all(gates.values()) else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

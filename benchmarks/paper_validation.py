@@ -24,7 +24,6 @@ from repro.core import (
     generate_workload,
     make_idedup,
     run_replay,
-    trace_stats,
 )
 from repro.core.ffh import occurrence_counts
 from repro.core.unseen import unseen_estimate_from_counts, unseen_estimate_jax_from_counts
@@ -147,7 +146,7 @@ def bench_estimation_quality(n_requests: int = 150_000, cache: int = 2048) -> Li
 def bench_ldss_accuracy(n_requests: int = 100_000) -> List[dict]:
     trace, stream_of = _trace("B", n_requests, seed=7)
     # ground truth LDSS per stream over the whole trace
-    from collections import Counter, defaultdict
+    from collections import defaultdict
 
     per_stream = defaultdict(list)
     for rec in trace:

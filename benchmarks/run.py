@@ -1,21 +1,71 @@
-"""Benchmark driver: one section per paper table/figure + kernels + roofline.
+"""Benchmark driver: one section per paper table/figure + kernels + roofline,
+plus ``--suite`` to run every gated JSON bench and merge the results.
 
 Prints ``name,us_per_call,derived`` CSV rows (per the repo convention):
 ``name`` identifies the figure/bench and parameters, ``us_per_call`` is the
 primary timing where meaningful (0 for ratio-style results), ``derived``
 packs the figure's headline quantity.
 
-Usage: PYTHONPATH=src python -m benchmarks.run [--full] [--only fig6,...]
+``--suite`` runs the four standalone gated benches (replay throughput,
+cluster scaling, resharding, fingerprint index) as subprocesses — each
+still writes its own ``BENCH_*.json`` — and merges every payload plus each
+bench's gate verdict into one ``BENCH_summary.json``, so the perf
+trajectory across PRs is one file instead of four.  Exit code 1 if any
+bench's gate failed.
+
+Usage:
+    PYTHONPATH=src python -m benchmarks.run [--full] [--only fig6,...]
+    PYTHONPATH=src python -m benchmarks.run --suite [--smoke]
 """
 
 from __future__ import annotations
 
 import argparse
 import json
+import os
+import subprocess
 import sys
 import time
 
 from . import kernel_bench, paper_validation, roofline
+
+# (suite name, script, emitted JSON) — run order is cheap-first
+SUITE = [
+    ("fp_index", "benchmarks/fp_index.py", "BENCH_fp_index.json"),
+    ("replay", "benchmarks/replay_throughput.py", "BENCH_replay.json"),
+    ("cluster", "benchmarks/cluster_scaling.py", "BENCH_cluster.json"),
+    ("resharding", "benchmarks/resharding.py", "BENCH_resharding.json"),
+]
+
+
+def run_suite(smoke: bool, out: str = "BENCH_summary.json") -> int:
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.pathsep.join(
+        p for p in (os.path.join(root, "src"), env.get("PYTHONPATH")) if p
+    )
+    summary = {"meta": {"smoke": smoke}, "suites": {}}
+    failed = []
+    for name, script, emitted in SUITE:
+        cmd = [sys.executable, os.path.join(root, script)]
+        if smoke:
+            cmd.append("--smoke")
+        print(f"== {name}: {' '.join(cmd[1:])}", flush=True)
+        rc = subprocess.call(cmd, cwd=root, env=env)
+        entry = {"script": script, "exit_code": rc, "gate_pass": rc == 0}
+        path = os.path.join(root, emitted)
+        if os.path.exists(path):
+            with open(path) as f:
+                entry["payload"] = json.load(f)
+        if rc != 0:
+            failed.append(name)
+        summary["suites"][name] = entry
+    summary["meta"]["all_gates_pass"] = not failed
+    with open(os.path.join(root, out), "w") as f:
+        json.dump(summary, f, indent=2)
+    print(f"wrote {out}; gates: "
+          + ", ".join(f"{n}={'ok' if n not in failed else 'FAIL'}" for n, _, _ in SUITE))
+    return 1 if failed else 0
 
 
 def _emit(rows, primary=None):
@@ -42,7 +92,12 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true", help="paper-scale workloads (slower)")
     ap.add_argument("--only", default="", help="comma list: fig4,fig5,fig6,fig7,fig9,fig10,fig11,table4,kernels,roofline")
+    ap.add_argument("--suite", action="store_true",
+                    help="run the gated JSON benches and merge into BENCH_summary.json")
+    ap.add_argument("--smoke", action="store_true", help="(--suite) CI-sized runs")
     args = ap.parse_args()
+    if args.suite:
+        raise SystemExit(run_suite(args.smoke))
     n = 600_000 if args.full else 250_000
     only = set(args.only.split(",")) if args.only else None
 

@@ -1,7 +1,7 @@
 """Mixtral 8x7B: 32L, d4096, 32H (GQA kv=8), d_ff 14336, MoE 8e top-2,
 sliding-window attention 4096 [arXiv:2401.04088]."""
 
-from repro.models.config import ATTN_SWA, MLP, MOE, ModelConfig
+from repro.models.config import ATTN_SWA, MOE, ModelConfig
 
 
 def full() -> ModelConfig:

@@ -12,6 +12,9 @@ Public surface:
   versioned, JSON-serializable state trees for every engine; a restored
   engine is bit-exact on all future writes (``core.snapshot``).
 * ``ReplayBatch`` — columnar batched ingestion (``core.batch_replay``).
+* ``FingerprintIndex`` — the exact membership layer every probe in the
+  stack routes through: a device-layout hash table (Pallas kernel pair /
+  vectorized numpy) over an authoritative host key set (``core.fp_index``).
 * ``StreamLocalityEstimator`` — reservoir + unseen-estimator LDSS tracking.
 * ``PrioritizedCache`` / ``GlobalCache`` — fingerprint caches.
 * ``SpatialThreshold`` — per-stream adaptive duplicate-sequence threshold.
@@ -36,6 +39,7 @@ from .cache import ARCCache, GlobalCache, LFUCache, LRUCache, PrioritizedCache
 from .cluster import ConsistentHashRing, ShardedCluster, aggregate_reports
 from .ffh import ffh_from_counts, ffh_from_sample, occurrence_counts
 from .fingerprint import OP_READ, OP_WRITE, TRACE_DTYPE, host_fingerprint
+from .fp_index import FingerprintIndex
 from .hybrid import HPDedup, HybridReport
 from .inline_engine import InlineDedupEngine
 from .ldss import HoltPredictor, StreamLocalityEstimator

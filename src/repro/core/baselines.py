@@ -25,6 +25,7 @@ import numpy as np
 
 from .cache import GlobalCache
 from .fingerprint import OP_WRITE, TRACE_DTYPE
+from .fp_index import FingerprintIndex
 from .hybrid import HPDedup, HybridReport
 from .inline_engine import InlineMetrics
 from .postprocess import PostProcessEngine, PostProcessMetrics
@@ -54,7 +55,7 @@ class PurePostProcessing:
         self.metrics = InlineMetrics()
         self._total_writes = 0
         self._dup_writes = 0
-        self._seen: set = set()
+        self._seen: FingerprintIndex = FingerprintIndex()
 
     def write_batch(self, streams, lbas, fps) -> np.ndarray:
         from .batch_replay import postproc_write_batch
@@ -111,7 +112,7 @@ class PurePostProcessing:
         self.post.metrics = PostProcessMetrics.from_snapshot(tree["post_metrics"])
         self._total_writes = int(tree["total_writes"])
         self._dup_writes = int(tree["dup_writes"])
-        self._seen = set(int(fp) for fp in tree["seen"])
+        self._seen = FingerprintIndex(int(fp) for fp in tree["seen"])
 
     @classmethod
     def restore(cls, tree: dict) -> "PurePostProcessing":
@@ -144,7 +145,7 @@ class DIODE:
         self.stream_templates = stream_templates or {}
         self._total_writes = 0
         self._dup_writes = 0
-        self._seen: set = set()
+        self._seen: FingerprintIndex = FingerprintIndex()
         self._run: list = []
         self._run_next_lba: Optional[int] = None
         self._run_stream: Optional[int] = None
@@ -278,7 +279,7 @@ class DIODE:
         self.thresholds.load_snapshot(tree["thresholds"])
         self._total_writes = int(tree["total_writes"])
         self._dup_writes = int(tree["dup_writes"])
-        self._seen = set(int(fp) for fp in tree["seen"])
+        self._seen = FingerprintIndex(int(fp) for fp in tree["seen"])
         self._run = [(int(s), int(lba), int(fp), int(pba)) for s, lba, fp, pba in tree["run"]]
         self._run_next_lba = None if tree["run_next_lba"] is None else int(tree["run_next_lba"])
         self._run_stream = None if tree["run_stream"] is None else int(tree["run_stream"])

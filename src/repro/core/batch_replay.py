@@ -226,36 +226,35 @@ def engine_finish_replay(engine) -> None:
 # ---------------------------------------------------------------------------
 
 
-def _count_ground_truth_dups(seen: set, w_fps: np.ndarray):
-    """Batched duplicate-write accounting against the all-time seen set.
+def _count_ground_truth_dups(seen, w_fps: np.ndarray):
+    """Batched duplicate-write accounting against the all-time seen index.
 
-    Returns (dup_count, uniq_list, first_idx, inv) from ``np.unique`` over
-    the batch's write fingerprints.  Only *unique* fingerprints are probed
-    against the Python set; the per-record first-occurrence structure
-    supplies the rest, so the cost is O(unique) set ops + one sort instead
-    of O(n) per-record Python ops.
+    Returns (dup_count, uniq, uniq_list, first_idx, inv) from ``np.unique``
+    over the batch's write fingerprints.  ``seen`` is the engine's
+    ``FingerprintIndex``: the batch's *unique* fingerprints are probed and
+    the fresh ones inserted in one ``probe_and_add`` launch against the
+    device-layout hash table — no per-fingerprint Python membership calls
+    on the bulk path; the per-record first-occurrence structure supplies
+    the rest.
     """
     uniq, first_idx, inv = np.unique(w_fps, return_index=True, return_inverse=True)
-    uniq_list = uniq.tolist()
-    known = np.fromiter(map(seen.__contains__, uniq_list), dtype=bool, count=len(uniq_list))
-    fresh = [f for f, k in zip(uniq_list, known) if not k]
-    seen.update(fresh)
-    dups = w_fps.size - len(fresh)
-    return dups, uniq_list, first_idx, inv
+    known = seen.probe_and_add(uniq)
+    dups = w_fps.size - int(np.count_nonzero(~known))
+    return dups, uniq, uniq.tolist(), first_idx, inv
 
 
-def _maybe_hit_flags(cache, uniq_list, first_idx, inv, nw: int, pending_fps=None) -> np.ndarray:
+def _maybe_hit_flags(cache, uniq, uniq_list, first_idx, inv, nw: int, pending_fps=None) -> np.ndarray:
     """Per-write-record flags: False means the record *cannot* hit the cache.
 
     A record can only hit if its fingerprint was cached at sub-batch start
-    (batched membership probe over the unique set), appeared earlier in the
-    sub-batch (and may have been admitted on its miss-write), or sits in a
-    pending duplicate run carried over from an earlier batch (a
-    below-threshold or stale-PBA run decision re-admits those mid-bulk).
-    Lookups are side-effect-free on misses, so skipping definite misses
-    preserves exact cache state.
+    (one batched probe of the cache's ``FingerprintIndex`` over the unique
+    set), appeared earlier in the sub-batch (and may have been admitted on
+    its miss-write), or sits in a pending duplicate run carried over from
+    an earlier batch (a below-threshold or stale-PBA run decision re-admits
+    those mid-bulk).  Lookups are side-effect-free on misses, so skipping
+    definite misses preserves exact cache state.
     """
-    in_cache = cache.contains_many(uniq_list)
+    in_cache = cache.contains_many(uniq)
     if pending_fps:
         in_cache |= np.fromiter(
             map(pending_fps.__contains__, uniq_list), dtype=bool, count=len(uniq_list)
@@ -358,7 +357,7 @@ def _hpdedup_bulk(hp, rb: ReplayBatch, out: Optional[np.ndarray], base: int) -> 
     staged = False
     if nw:
         # ground truth for ratio metrics (HPDedup.write's _seen_fps branch)
-        dups, uniq_list, first_idx, inv = _count_ground_truth_dups(hp._seen_fps, w_fps)
+        dups, uniq, uniq_list, first_idx, inv = _count_ground_truth_dups(hp._seen_fps, w_fps)
         hp._dup_writes += dups
         pending_fps = {
             item[1] for run in inline._pending.values() for item in run.items
@@ -366,7 +365,7 @@ def _hpdedup_bulk(hp, rb: ReplayBatch, out: Optional[np.ndarray], base: int) -> 
         pending_keys = {
             (s, item[0]) for s, run in inline._pending.items() for item in run.items
         }
-        maybe_w = _maybe_hit_flags(inline.cache, uniq_list, first_idx, inv, nw, pending_fps)
+        maybe_w = _maybe_hit_flags(inline.cache, uniq, uniq_list, first_idx, inv, nw, pending_fps)
         staged = _certify_staged(store, w_streams, w_lbas, pending_keys)
 
         # per-stream grouping, shared by the accumulation and estimator steps
@@ -706,11 +705,11 @@ def _diode_bulk(d, rb: ReplayBatch, out: Optional[np.ndarray], base: int) -> Non
     ptype_w: Optional[np.ndarray] = None
     staged = False
     if nw:
-        dups, uniq_list, first_idx, inv = _count_ground_truth_dups(d._seen, w_fps)
+        dups, uniq, uniq_list, first_idx, inv = _count_ground_truth_dups(d._seen, w_fps)
         d._dup_writes += dups
         pending_fps = {item[2] for item in d._run}  # (stream, lba, fp, pba)
         pending_keys = {(item[0], item[1]) for item in d._run}
-        maybe_w = _maybe_hit_flags(d.cache, uniq_list, first_idx, inv, nw, pending_fps)
+        maybe_w = _maybe_hit_flags(d.cache, uniq, uniq_list, first_idx, inv, nw, pending_fps)
         staged = _certify_staged(store, w_streams, w_lbas, pending_keys)
 
         # vectorized P-type classification.  is_ptype computes
@@ -838,7 +837,7 @@ def _postproc_bulk(pp, rb: ReplayBatch) -> None:
         nw = int(np.count_nonzero(is_w))
     staged = False
     if nw:
-        dups, _, _, _ = _count_ground_truth_dups(pp._seen, w_fps)
+        dups, _, _, _, _ = _count_ground_truth_dups(pp._seen, w_fps)
         pp._dup_writes += dups
         staged = _certify_staged(store, w_streams, w_lbas)
     pp._total_writes += nw

@@ -23,6 +23,7 @@ from typing import Dict, Optional, Tuple
 
 import numpy as np
 
+from .fp_index import FingerprintIndex
 from .segment_tree import FenwickSegments
 from .statetree import from_pairs, pairs
 
@@ -63,6 +64,10 @@ class LRUCache:
         """Update a resident entry's value without touching recency."""
         if fp in self._d:
             self._d[fp] = pba
+
+    def keys(self):
+        """Resident fingerprints (index rebuild after snapshot load)."""
+        return list(self._d)
 
     def __contains__(self, fp: int) -> bool:
         return fp in self._d
@@ -141,6 +146,10 @@ class LFUCache:
         """Update a resident entry's value without touching frequency."""
         if fp in self._val:
             self._val[fp] = pba
+
+    def keys(self):
+        """Resident fingerprints (index rebuild after snapshot load)."""
+        return list(self._val)
 
     def __contains__(self, fp: int) -> bool:
         return fp in self._val
@@ -258,6 +267,11 @@ class ARCCache:
         elif fp in self.t2:
             self.t2[fp] = pba
 
+    def keys(self):
+        """Resident fingerprints — T1+T2 only, ghosts are not members
+        (index rebuild after snapshot load)."""
+        return list(self.t1) + list(self.t2)
+
     def __contains__(self, fp: int) -> bool:
         return fp in self.t1 or fp in self.t2
 
@@ -313,6 +327,10 @@ class GlobalCache:
         self.capacity = capacity
         self.cache = make_policy(policy, capacity)
         self.inserted = 0
+        # resident-fingerprint index: membership mirror of the policy's
+        # resident set, probed in one batched launch by the replay pre-pass.
+        # LRU/LFU/ARC ordering state stays host-side in the policy objects.
+        self.index = FingerprintIndex()
 
     def lookup(self, stream: int, fp: int) -> Optional[int]:
         return self.cache.lookup(fp)
@@ -320,15 +338,18 @@ class GlobalCache:
     def contains_many(self, fps) -> np.ndarray:
         """Side-effect-free membership probe for a batch of fingerprints
         (the batched replay pre-pass; does not touch recency/frequency)."""
-        return np.fromiter(map(self.cache.__contains__, fps), dtype=bool, count=len(fps))
+        return self.index.contains_many(fps)
 
     def admit(self, stream: int, fp: int, pba: int) -> None:
         if fp in self.cache:
             self.cache.insert(fp, pba)
             return
         while len(self.cache) >= self.capacity:
-            self.cache.evict_one()
+            out = self.cache.evict_one()
+            if out is not None:
+                self.index.discard(out[0])
         self.cache.insert(fp, pba)
+        self.index.add(fp)
         self.inserted += 1
 
     def occupancy(self) -> Dict[int, int]:
@@ -344,12 +365,15 @@ class GlobalCache:
     def load_snapshot(self, tree: dict) -> None:
         self.inserted = int(tree["inserted"])
         self.cache = policy_from_snapshot(tree["policy"])
+        # the index is derived, never serialized: rebuild from the policy
+        self.index = FingerprintIndex(self.cache.keys())
 
     def evict_fp(self, fp: int) -> Optional[int]:
         """Drop ``fp``; returns its PBA (resharding pulls moved entries out)."""
         pba = self.cache.peek(fp)
         if pba is not None:
             self.cache.remove(fp)
+            self.index.discard(fp)
         return pba
 
     def migrate_in(self, stream: int, fp: int, pba: int) -> bool:
@@ -364,6 +388,7 @@ class GlobalCache:
         if len(self.cache) >= self.capacity:
             return False
         self.cache.insert(fp, pba)
+        self.index.add(fp)
         return True
 
 
@@ -390,6 +415,10 @@ class PrioritizedCache:
         self.rng = np.random.default_rng(seed)
         self.streams: Dict[int, object] = {}
         self.owner: Dict[int, int] = {}  # fp -> stream whose sub-cache holds it
+        # resident-fingerprint index: membership mirror of ``owner``'s key
+        # set, probed in one batched launch by the replay pre-pass (the
+        # owner dict stays authoritative for holder lookups)
+        self.index = FingerprintIndex()
         self.ldss: Dict[int, float] = {}
         self._best_ldss = 0.0  # memoized max; recomputed on set_ldss only
         self.segments = FenwickSegments()
@@ -444,7 +473,7 @@ class PrioritizedCache:
     def contains_many(self, fps) -> np.ndarray:
         """Side-effect-free membership probe for a batch of fingerprints
         (the batched replay pre-pass; does not touch recency/frequency)."""
-        return np.fromiter(map(self.owner.__contains__, fps), dtype=bool, count=len(fps))
+        return self.index.contains_many(fps)
 
     def admit(self, stream: int, fp: int, pba: int) -> None:
         holder = self.owner.get(fp)
@@ -459,6 +488,7 @@ class PrioritizedCache:
                 break
         sub.insert(fp, pba)
         self.owner[fp] = stream
+        self.index.add(fp)
         self.total += 1
         self.inserted += 1
         if len(sub) == 1:
@@ -480,6 +510,7 @@ class PrioritizedCache:
             self.segments.set_weight(victim_stream, 0.0)
             return self._evict_fallback()
         self.owner.pop(out[0], None)
+        self.index.discard(out[0])
         self.total -= 1
         if len(sub) == 0:
             self.segments.set_weight(victim_stream, 0.0)
@@ -490,6 +521,7 @@ class PrioritizedCache:
             out = sub.evict_one()
             if out is not None:
                 self.owner.pop(out[0], None)
+                self.index.discard(out[0])
                 self.total -= 1
                 if len(sub) == 0:
                     self.segments.set_weight(s, 0.0)
@@ -524,6 +556,8 @@ class PrioritizedCache:
         self.rng.bit_generator.state = tree["rng"]
         self.streams = {int(s): policy_from_snapshot(sub) for s, sub in tree["streams"]}
         self.owner = from_pairs(tree["owner"], value=int)
+        # the index is derived, never serialized: rebuild from the owner map
+        self.index = FingerprintIndex(self.owner)
         self.ldss = from_pairs(tree["ldss"], value=float)
         self._best_ldss = float(tree["best_ldss"])
         self.total = int(tree["total"])
@@ -541,6 +575,7 @@ class PrioritizedCache:
         pba = sub.peek(fp)
         sub.remove(fp)
         del self.owner[fp]
+        self.index.discard(fp)
         self.total -= 1
         if len(sub) == 0:
             self.segments.set_weight(holder, 0.0)
@@ -563,6 +598,7 @@ class PrioritizedCache:
         sub = self._sub(stream)
         sub.insert(fp, pba)
         self.owner[fp] = stream
+        self.index.add(fp)
         self.total += 1
         if len(sub) == 1:
             self.segments.set_weight(stream, self._evict_priority(stream))

@@ -291,6 +291,38 @@ class ShardedCluster:
                 out[i] = directory.get(key, next(read_default))
         return out
 
+    def probe_fps(self, fps) -> np.ndarray:
+        """Cluster-wide exact membership: has any shard ever seen each
+        fingerprint?  One vectorized ring lookup routes the batch, then each
+        owning shard's ``FingerprintIndex`` is probed with one batched
+        launch — the scatter pre-pass's membership primitive, also the
+        serving layer's bulk existence check.  Under stream routing a
+        fingerprint may live on any shard, so every shard is probed and the
+        results OR-ed (still one launch per shard)."""
+        keys = np.ascontiguousarray(fps, dtype=np.uint64)
+        if keys.size == 0:
+            return np.zeros(0, dtype=bool)
+        if self.num_shards == 1:
+            return _probe_seen(self.shards[0], keys)
+        if self.routing == "stream":
+            out = np.zeros(keys.size, dtype=bool)
+            for engine in self.shards:
+                out |= _probe_seen(engine, keys)
+            return out
+        sid = self.ring.shard_of_many(keys)
+        order = np.argsort(sid, kind="stable")
+        counts = np.bincount(sid, minlength=self.num_shards)
+        sorted_keys = keys[order]
+        flags = np.empty(keys.size, dtype=bool)
+        a = 0
+        for s, c in enumerate(counts.tolist()):
+            if c:
+                flags[a : a + c] = _probe_seen(self.shards[s], sorted_keys[a : a + c])
+                a += c
+        out = np.empty(keys.size, dtype=bool)
+        out[order] = flags
+        return out
+
     # -- Engine protocol ----------------------------------------------------------
     def write_batch(self, streams, lbas, fps) -> np.ndarray:
         """Scatter aligned write columns across shards; gather inline flags."""
@@ -716,12 +748,32 @@ class ShardedCluster:
 
 
 def _seen_set_of(engine) -> Optional[set]:
-    """The engine's ground-truth seen-fingerprint set (None if unknown)."""
+    """The engine's ground-truth seen-fingerprint set (None if unknown).
+
+    For the built-in engines this is a ``FingerprintIndex`` (a ``set``
+    subclass), so membership transplants during resharding keep its
+    device-layout table coherent through the overridden mutators."""
     for attr in ("_seen_fps", "_seen"):
         seen = getattr(engine, attr, None)
         if isinstance(seen, set):
             return seen
     return None
+
+
+def _probe_seen(engine, keys: np.ndarray) -> np.ndarray:
+    """Batched seen-membership for one shard: the built-in engines expose a
+    ``FingerprintIndex`` (one vectorized launch); a custom engine with a
+    plain set falls back to host probes."""
+    seen = _seen_set_of(engine)
+    if seen is None:
+        raise TypeError(
+            f"engine {type(engine).__name__} exposes no seen-fingerprint "
+            "index; cluster-wide probes support the built-in engine types"
+        )
+    probe = getattr(seen, "contains_many", None)
+    if probe is not None:
+        return probe(keys)
+    return np.fromiter(map(seen.__contains__, keys.tolist()), dtype=bool, count=keys.size)
 
 
 def _cache_of(engine):
@@ -764,7 +816,7 @@ def _migrate_fp(src, dst, fp: int, directory: Dict[int, int], t: int):
         ):
             moved_cache = 1
 
-    pbas = src_store.fp_table.pop(fp, None)
+    pbas = src_store.extract_fp(fp)
     if not pbas:
         return 0, moved_cache
     for pba in pbas:
@@ -783,5 +835,8 @@ def _migrate_fp(src, dst, fp: int, directory: Dict[int, int], t: int):
                 dst_store._lba_watermark[key[0]] = key[1] + 1
         if not dst_store._reverse_dirty:
             dst_store.lbas_of_pba[pba] = set(keys)
-    dst_store.fp_table.setdefault(fp, []).extend(pbas)
+    # absorb keeps the destination's fingerprint index and duplicate-
+    # candidate set coherent (a migrated fp landing on a shard that already
+    # holds it is exactly the cross-shard duplicate reconcile later merges)
+    dst_store.absorb_fp(fp, pbas)
     return len(pbas), moved_cache

@@ -1,0 +1,481 @@
+"""Device-resident exact fingerprint index (DESIGN §4).
+
+``FingerprintIndex`` is the one membership layer every probe in the stack
+goes through: the inline phase's all-time seen set, the fingerprint cache's
+batched pre-probe, the block store's fingerprint-table membership and the
+cluster's multi-shard scatter probe all hold one of these.  It pairs
+
+* a **device-layout hash table** — the bounded-window open-addressing
+  layout of ``repro.kernels.fp_index``, two uint32 lane arrays probed
+  either by the Pallas kernel pair (TPU, or interpret mode when forced) or
+  by a bit-identical vectorized numpy implementation (the CPU fast path) —
+  with
+* the **authoritative host state** — the index *is a* ``set`` of Python
+  int fingerprints; the set is the ground truth the table accelerates.
+
+Exactness contract (property-tested in tests/test_fp_index.py):
+
+* no false positives or negatives, ever: the table stores full 64-bit keys
+  (not a partial-hash filter), keys that cannot live in the table — window
+  **overflow**, and the two values colliding with the in-band EMPTY/
+  TOMBSTONE sentinels (0 and 2^64-1) — **spill to a host set** that every
+  batched probe consults, and removals tombstone their slot;
+* the table is **derived, never serialized**: snapshots persist the key
+  set (exactly as the engines always did) and a restored index rebuilds
+  its table from it, so the snapshot state-tree format is untouched and a
+  corrupted table can always be rebuilt host-side.
+
+Scalar mutations (the per-record oracle path) stage into pending buffers —
+native-set speed on the scalar hot path — and are folded into the table
+lazily before the next batched probe.  Batched probes (``contains_many``,
+``probe_and_add``) are one vectorized launch per call; tiny batches fall
+back to the host set, below the size where a vectorized launch wins
+(``small_batch``, set to 0 by tests that want the table path exercised
+unconditionally).
+"""
+
+from __future__ import annotations
+
+from typing import Iterable
+
+import numpy as np
+
+from ..kernels.fp_index import EMPTY32, OVERFLOW, TOMB32, WINDOW, slot_hash_host
+
+EMPTY_KEY = 0  # lo == hi == EMPTY32
+TOMB_KEY = (1 << 64) - 1  # lo == hi == TOMB32
+_U32 = np.uint64(0xFFFFFFFF)
+
+DEFAULT_CAPACITY = 1 << 12
+# Above this fill fraction the table rebuilds at the next power of two.
+# Deliberately low (memory-for-speed): probe cost is dominated by how many
+# probe rounds survive past the first gather, which shrinks geometrically
+# with the load factor — measured on this host, a ~0.25-loaded table probes
+# ~3x faster than a ~0.5-loaded one, for 8 bytes/slot of extra memory.
+# Window overflow (-> host spill) is also rarer at low load.
+GROW_LOAD = 0.35
+# Probing fewer keys than this goes through the host set: a vectorized
+# launch has fixed overhead that only pays off on real batches.  Measured
+# crossover on this host is ~1.5-2k keys (the per-key Python set probe is
+# ~40-110ns; the table path's flush + gather setup is ~30-70us) — relevant
+# for the sharded cluster, whose scatter divides driver batches into
+# per-shard sub-batches that can land right at this scale.
+SMALL_BATCH = 1536
+
+
+def _split(keys: np.ndarray):
+    return (keys & _U32).astype(np.uint32), (keys >> np.uint64(32)).astype(np.uint32)
+
+
+class FingerprintIndex(set):
+    """Exact membership index over 64-bit fingerprints.
+
+    Subclasses ``set`` so every host-side consumer of the engines' seen
+    sets (snapshots, resharding migration, harness population scans) keeps
+    working unchanged — the set *is* the authoritative state; the table,
+    spill and pending buffers are the device-resident acceleration layered
+    on top.  All mutations must go through the overridden mutators (they
+    keep the table coherent); the read-only ``set`` API is inherited as is.
+    """
+
+    __slots__ = (
+        "_cap",
+        "_t64",
+        "_spill",
+        "_pending_adds",
+        "_pending_removes",
+        "_table_live",
+        "_tombstones",
+        "_backend",
+        "small_batch",
+    )
+
+    def __init__(
+        self,
+        keys: Iterable[int] = (),
+        *,
+        capacity: int = DEFAULT_CAPACITY,
+        backend: str = "auto",
+        small_batch: int = SMALL_BATCH,
+    ):
+        super().__init__(keys)
+        if backend not in ("auto", "numpy", "pallas"):
+            raise ValueError(f"backend must be auto|numpy|pallas, got {backend!r}")
+        self._backend = backend
+        self.small_batch = small_batch
+        cap = 1
+        while cap < capacity:
+            cap <<= 1
+        self._rebuild(cap)
+
+    # -- backend ---------------------------------------------------------------
+    def _use_pallas(self) -> bool:
+        if self._backend == "auto":
+            try:
+                import jax
+
+                self._backend = "pallas" if jax.default_backend() == "tpu" else "numpy"
+            except Exception:
+                self._backend = "numpy"
+        return self._backend == "pallas"
+
+    # -- table maintenance -----------------------------------------------------
+    def _rebuild(self, cap: int) -> None:
+        """(Re)build the table from the authoritative set — the restore path
+        and the growth path are the same code on purpose.  Folds any pending
+        scalar mutations (the set already reflects them) and clears spill
+        back to what genuinely cannot live in the table."""
+        while len(self) > GROW_LOAD * cap:
+            cap <<= 1
+        self._cap = cap
+        phys = cap + WINDOW - 1
+        # host table: the kernel's two uint32 lane arrays, interleaved into
+        # one uint64 word per slot so the numpy fast path pays one gather
+        # and one compare per probe round (``_lanes``/``_set_lanes``
+        # translate at the Pallas kernel boundary)
+        self._t64 = np.zeros(phys, dtype=np.uint64)
+        self._spill = {k for k in (EMPTY_KEY, TOMB_KEY) if k in self}
+        self._pending_adds = {}
+        self._pending_removes = {}
+        self._table_live = 0
+        self._tombstones = 0
+        n = len(self) - len(self._spill)
+        if n:
+            keys = np.fromiter(
+                (k for k in self if k != EMPTY_KEY and k != TOMB_KEY),
+                dtype=np.uint64,
+                count=n,
+            )
+            for a in range(0, n, 1 << 16):
+                self._table_insert(keys[a : a + (1 << 16)])
+
+    def _grow_if_needed(self, incoming: int) -> bool:
+        """Rebuild at a bigger capacity if ``incoming`` more table entries
+        would pass the load threshold (or tombstones piled up).  Returns
+        True when it rebuilt — the rebuild re-inserts *every* set member,
+        so the caller must then skip its own explicit insert.
+        """
+        need = self._table_live + incoming
+        if need <= GROW_LOAD * self._cap and self._tombstones <= self._cap // 4:
+            return False
+        cap = self._cap
+        while need > GROW_LOAD * cap:
+            cap <<= 1
+        self._rebuild(cap)
+        return True
+
+    def _flush(self) -> None:
+        """Fold pending scalar mutations into the table (adds and removes
+        are disjoint by construction, so order is irrelevant)."""
+        if not self._pending_adds and not self._pending_removes:
+            return
+        if self._grow_if_needed(len(self._pending_adds)):
+            return  # the rebuild folded both buffers
+        if self._pending_adds:
+            keys = np.fromiter(self._pending_adds, dtype=np.uint64, count=len(self._pending_adds))
+            self._pending_adds = {}
+            self._table_insert(keys)
+        if self._pending_removes:
+            keys = np.fromiter(
+                self._pending_removes, dtype=np.uint64, count=len(self._pending_removes)
+            )
+            self._pending_removes = {}
+            self._table_remove(keys)
+
+    def _lanes(self):
+        """The table as the kernel's two uint32 lane arrays (copies)."""
+        return (self._t64 & _U32).astype(np.uint32), (self._t64 >> np.uint64(32)).astype(
+            np.uint32
+        )
+
+    def _set_lanes(self, tlo: np.ndarray, thi: np.ndarray) -> None:
+        self._t64 = (thi.astype(np.uint64) << np.uint64(32)) | tlo.astype(np.uint64)
+
+    def _home_slots(self, keys: np.ndarray) -> np.ndarray:
+        lo, hi = _split(keys)
+        return (slot_hash_host(lo, hi) & np.uint32(self._cap - 1)).astype(np.int64)
+
+    def _table_insert(self, keys: np.ndarray) -> None:
+        """Place unique, sentinel-free keys known absent from the table;
+        window overflow spills to the host set."""
+        if keys.size == 0:
+            return
+        if self._use_pallas():
+            from ..kernels.ops import fp_index_insert
+
+            lo, hi = _split(keys)
+            tlo, thi, status = fp_index_insert(lo, hi, *self._lanes())
+            self._set_lanes(tlo, thi)
+            over = status == OVERFLOW
+            self._table_live += int(keys.size - over.sum())
+            if over.any():
+                self._spill.update(keys[over].tolist())
+            # the kernel's PLACED status doesn't say whether an EMPTY or a
+            # TOMBSTONE slot was consumed — recount tombstones vectorized so
+            # the rebuild trigger agrees with the numpy branch
+            self._tombstones = int(np.count_nonzero(self._t64 == np.uint64(TOMB_KEY)))
+            return
+        home = self._home_slots(keys)
+        t64 = self._t64
+        tomb = np.uint64(TOMB_KEY)
+        for r in range(WINDOW):
+            if keys.size == 0:
+                return
+            slot = home + r
+            cur = t64[slot]
+            free = (cur == 0) | (cur == tomb)
+            cand = np.nonzero(free)[0]
+            if cand.size:
+                # one winner per distinct slot (first in batch order); losers
+                # probe the next offset, exactly as if the winner had been
+                # inserted before them
+                _, first = np.unique(slot[cand], return_index=True)
+                win = cand[first]
+                wslot = slot[win]
+                self._tombstones -= int((cur[win] == tomb).sum())
+                t64[wslot] = keys[win]
+                self._table_live += win.size
+                keep = np.ones(keys.size, dtype=bool)
+                keep[win] = False
+                keys, home = keys[keep], home[keep]
+        if keys.size:
+            self._spill.update(keys.tolist())
+
+    def _table_remove(self, keys: np.ndarray) -> None:
+        """Tombstone table slots for keys known resident in the table."""
+        if keys.size == 0:
+            return
+        home = self._home_slots(keys)
+        t64 = self._t64
+        for r in range(WINDOW):
+            if home.size == 0:
+                return
+            slot = home + r
+            match = t64[slot] == keys
+            if match.any():
+                t64[slot[match]] = np.uint64(TOMB_KEY)
+                self._table_live -= int(match.sum())
+                self._tombstones += int(match.sum())
+                keep = ~match
+                keys, home = keys[keep], home[keep]
+
+    def _table_probe(self, keys: np.ndarray) -> np.ndarray:
+        """Exact membership of sentinel-free keys against table + spill."""
+        if self._use_pallas():
+            from ..kernels.ops import fp_index_probe
+
+            lo, hi = _split(keys)
+            found = fp_index_probe(lo, hi, *self._lanes())
+        else:
+            home = self._home_slots(keys)
+            found = np.zeros(keys.size, dtype=bool)
+            idx = np.arange(keys.size)
+            rem = keys
+            t64 = self._t64
+            for r in range(WINDOW):
+                cur = t64[home + r]
+                match = cur == rem
+                if match.any():
+                    found[idx[match]] = True
+                # EMPTY terminates a probe chain: inserts are first-fit, so a
+                # key never sits past a slot that was EMPTY when it arrived,
+                # and removals tombstone instead of emptying — the active set
+                # shrinks geometrically with the load factor, so most keys
+                # resolve within the first round or two
+                undecided = ~(match | (cur == 0))
+                if not undecided.any():
+                    break
+                idx, rem, home = idx[undecided], rem[undecided], home[undecided]
+        # consult the spill set unless it holds nothing but sentinel keys
+        # (sentinel-free probe keys can never match those)
+        spill = self._spill
+        if len(spill) > (1 if EMPTY_KEY in spill else 0) + (1 if TOMB_KEY in spill else 0):
+            miss = np.nonzero(~found)[0]
+            if miss.size:
+                found[miss] = np.fromiter(
+                    map(spill.__contains__, keys[miss].tolist()), dtype=bool, count=miss.size
+                )
+        return found
+
+    # -- batched API -----------------------------------------------------------
+    def contains_many(self, fps) -> np.ndarray:
+        """Side-effect-free batched membership probe."""
+        keys = np.ascontiguousarray(fps, dtype=np.uint64)
+        n = keys.size
+        if n == 0:
+            return np.zeros(0, dtype=bool)
+        if n <= self.small_batch:
+            return np.fromiter(map(self.__contains__, keys.tolist()), dtype=bool, count=n)
+        self._flush()
+        out = self._table_probe(keys)
+        special = (keys == np.uint64(EMPTY_KEY)) | (keys == np.uint64(TOMB_KEY))
+        if special.any():
+            si = np.nonzero(special)[0]
+            out[si] = np.fromiter(
+                (int(keys[i]) in self._spill for i in si), dtype=bool, count=si.size
+            )
+        return out
+
+    def probe_and_add(self, uniq: np.ndarray) -> np.ndarray:
+        """One batched membership query + insertion of the missing keys.
+
+        ``uniq`` must be unique (``np.unique`` output).  Returns the
+        *pre-insert* membership flags — the inline pre-pass's ground-truth
+        duplicate accounting in a single launch.
+        """
+        uniq = np.ascontiguousarray(uniq, dtype=np.uint64)
+        known = self.contains_many(uniq)
+        fresh = uniq[~known]
+        if fresh.size == 0:
+            return known
+        super().update(fresh.tolist())
+        if fresh.size <= self.small_batch:
+            # stage through the pending buffer like scalar adds (the keys
+            # are not in the set yet per `known`, so the invariant holds)
+            for k in fresh.tolist():
+                if k == EMPTY_KEY or k == TOMB_KEY:
+                    self._spill.add(k)
+                elif k in self._pending_removes:
+                    del self._pending_removes[k]
+                else:
+                    self._pending_adds[k] = None
+            return known
+        special = (fresh == np.uint64(EMPTY_KEY)) | (fresh == np.uint64(TOMB_KEY))
+        if special.any():
+            self._spill.update(fresh[special].tolist())
+            fresh = fresh[~special]
+        if not self._grow_if_needed(fresh.size):
+            self._table_insert(fresh)
+        return known
+
+    def add_many(self, fps) -> None:
+        """Batched insert (duplicates in the batch are fine)."""
+        keys = np.ascontiguousarray(fps, dtype=np.uint64)
+        if keys.size:
+            self.probe_and_add(np.unique(keys))
+
+    def remove_many(self, fps) -> None:
+        """Batched removal; keys not present are ignored."""
+        keys = np.unique(np.ascontiguousarray(fps, dtype=np.uint64))
+        if keys.size == 0:
+            return
+        self._flush()
+        present = np.fromiter(map(self.__contains__, keys.tolist()), dtype=bool, count=keys.size)
+        keys = keys[present]
+        if keys.size == 0:
+            return
+        super().difference_update(keys.tolist())
+        in_spill = np.fromiter(
+            map(self._spill.__contains__, keys.tolist()), dtype=bool, count=keys.size
+        )
+        if in_spill.any():
+            self._spill.difference_update(keys[in_spill].tolist())
+            keys = keys[~in_spill]
+        self._table_remove(keys)
+
+    # -- scalar mutators (pending-buffer staged) -------------------------------
+    def add(self, fp: int) -> None:
+        if fp in self:
+            return
+        super().add(fp)
+        if fp == EMPTY_KEY or fp == TOMB_KEY:
+            self._spill.add(fp)
+        elif fp in self._pending_removes:
+            del self._pending_removes[fp]  # still physically in the table
+        else:
+            self._pending_adds[fp] = None
+
+    def discard(self, fp: int) -> None:
+        if fp not in self:
+            return
+        super().discard(fp)
+        if fp in self._spill:
+            self._spill.discard(fp)
+        elif fp in self._pending_adds:
+            del self._pending_adds[fp]  # never reached the table
+        else:
+            self._pending_removes[fp] = None
+
+    def remove(self, fp: int) -> None:
+        if fp not in self:
+            raise KeyError(fp)
+        self.discard(fp)
+
+    def pop(self) -> int:
+        for fp in self:
+            self.discard(fp)
+            return fp
+        raise KeyError("pop from an empty FingerprintIndex")
+
+    def update(self, *others) -> None:
+        for other in others:
+            if isinstance(other, np.ndarray):
+                self.add_many(other)
+            else:
+                for fp in other:
+                    self.add(fp)
+
+    def difference_update(self, *others) -> None:
+        for other in others:
+            for fp in list(other) if other is self else other:
+                self.discard(fp)
+
+    def intersection_update(self, *others) -> None:
+        keep = set(self)
+        for other in others:
+            keep &= set(other)
+        for fp in [k for k in self if k not in keep]:
+            self.discard(fp)
+
+    def symmetric_difference_update(self, other) -> None:
+        for fp in set(other):
+            if fp in self:
+                self.discard(fp)
+            else:
+                self.add(fp)
+
+    def __ior__(self, other):
+        self.update(other)
+        return self
+
+    def __isub__(self, other):
+        self.difference_update(other)
+        return self
+
+    def __iand__(self, other):
+        self.intersection_update(other)
+        return self
+
+    def __ixor__(self, other):
+        self.symmetric_difference_update(other)
+        return self
+
+    def clear(self) -> None:
+        super().clear()
+        self._rebuild(self._cap)
+
+    # -- diagnostics / tests ---------------------------------------------------
+    def spilled(self) -> int:
+        """Host-spilled keys (window overflow + sentinel-colliding)."""
+        return len(self._spill)
+
+    def table_stats(self) -> dict:
+        return {
+            "capacity": self._cap,
+            "live": self._table_live,
+            "tombstones": self._tombstones,
+            "spilled": len(self._spill),
+            "pending": len(self._pending_adds) + len(self._pending_removes),
+            "backend": self._backend,
+        }
+
+    def check_consistency(self) -> None:
+        """Assert the derived structures exactly re-derive the set."""
+        self._flush()
+        decoded = self._t64
+        occupied = decoded[(decoded != EMPTY_KEY) & (decoded != TOMB_KEY)]
+        table_keys = set(occupied.tolist())
+        assert len(occupied) == len(table_keys), "duplicate table entries"
+        assert len(occupied) == self._table_live, (len(occupied), self._table_live)
+        assert table_keys.isdisjoint(self._spill)
+        assert table_keys | self._spill == set(self), "table+spill != authoritative set"

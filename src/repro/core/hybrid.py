@@ -10,11 +10,12 @@ embed; trace replay drives it directly for the paper-validation benchmarks.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Dict, Iterable, Optional
+from typing import Iterable, Optional
 
 import numpy as np
 
 from .fingerprint import OP_WRITE, TRACE_DTYPE
+from .fp_index import FingerprintIndex
 from .inline_engine import InlineDedupEngine, InlineMetrics
 from .postprocess import PostProcessEngine, PostProcessMetrics
 from .store import BlockStore
@@ -103,7 +104,9 @@ class HPDedup:
         self._writes_since_post = 0
         self._total_writes = 0
         self._dup_writes = 0
-        self._seen_fps: set = set()
+        # all-time seen fingerprints: a set-compatible exact index whose
+        # batched probes run through the device-layout hash table
+        self._seen_fps: FingerprintIndex = FingerprintIndex()
 
     # -- request ingestion -------------------------------------------------------
     def write(self, stream: int, lba: int, fp: int) -> bool:
@@ -201,7 +204,9 @@ class HPDedup:
         self._writes_since_post = int(tree["writes_since_post"])
         self._total_writes = int(tree["total_writes"])
         self._dup_writes = int(tree["dup_writes"])
-        self._seen_fps = set(int(fp) for fp in tree["seen_fps"])
+        # the index table is derived state: rebuilt from the serialized key
+        # list, never persisted itself (snapshot format unchanged)
+        self._seen_fps = FingerprintIndex(int(fp) for fp in tree["seen_fps"])
 
     @classmethod
     def restore(cls, tree: dict) -> "HPDedup":

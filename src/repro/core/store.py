@@ -18,6 +18,7 @@ from __future__ import annotations
 from collections import OrderedDict
 from typing import Callable, Dict, List, Optional, Tuple
 
+from .fp_index import FingerprintIndex
 from .statetree import from_kv3, from_pairs, kv3, pairs
 
 
@@ -66,6 +67,15 @@ class BlockStore:
         self.lba_map: Dict[Tuple[int, int], int] = {}
         self.lbas_of_pba: Dict[int, set] = {}  # reverse index for remapping
         self.fp_table: Dict[int, List[int]] = {}
+        # membership index over fp_table's key set (batched probes for the
+        # serving layer and the cluster; derived, rebuilt on restore)
+        self.fp_index = FingerprintIndex()
+        # incremental duplicate-candidate set: fingerprints currently stored
+        # at >1 PBA.  Replaces the full fp_table scan per post-processing
+        # pass; ``duplicate_fingerprints`` sorts it so merge order is a
+        # deterministic function of store content (and thus identical
+        # between a live engine and one restored from its snapshot).
+        self._dup_fps: set = set()
         self.refcount: Dict[int, int] = {}
         self.fp_of_pba: Dict[int, int] = {}
         self.buffer = DLRUBuffer(data_buffer_blocks)
@@ -101,7 +111,12 @@ class BlockStore:
         """Write content to a fresh PBA (inline phase found no duplicate)."""
         pba = self._next_pba
         self._next_pba += 1
-        self.fp_table.setdefault(fp, []).append(pba)
+        lst = self.fp_table.setdefault(fp, [])
+        lst.append(pba)
+        if len(lst) == 1:
+            self.fp_index.add(fp)
+        else:
+            self._dup_fps.add(fp)
         self.fp_of_pba[pba] = fp
         self.refcount[pba] = 0
         self._map(stream, lba, pba)
@@ -153,12 +168,18 @@ class BlockStore:
         if sw:
             ft = self.fp_table
             ft_get = ft.get
+            fresh_fps = []
+            dup_add = self._dup_fps.add
             for fp, pba in sw:
                 lst = ft_get(fp)
                 if lst is None:
                     ft[fp] = [pba]
+                    fresh_fps.append(fp)
                 else:
                     lst.append(pba)
+                    dup_add(fp)
+            if fresh_fps:
+                self.fp_index.add_many(fresh_fps)
             # fresh PBAs start at refcount 1 (the write's own LBA mapping)
             self.refcount.update(dict.fromkeys([p for _, p in sw], 1))
             self.live_blocks += len(sw)
@@ -246,8 +267,11 @@ class BlockStore:
                     lst.remove(pba)
                 except ValueError:
                     pass
+                if len(lst) <= 1:
+                    self._dup_fps.discard(fp)
                 if not lst:
                     del self.fp_table[fp]
+                    self.fp_index.discard(fp)
         self.refcount.pop(pba, None)
         self.lbas_of_pba.pop(pba, None)
         self.buffer.invalidate(pba)
@@ -260,10 +284,25 @@ class BlockStore:
             self.buffer.access(pba)
         return pba
 
+    # -- membership (FingerprintIndex-backed) --------------------------------------
+    def has_fp(self, fp: int) -> bool:
+        """Is any live block's content fingerprinted ``fp``?"""
+        return fp in self.fp_index
+
+    def contains_fps(self, fps):
+        """Batched fingerprint-table membership — one index launch."""
+        return self.fp_index.contains_many(fps)
+
     # -- post-processing support ---------------------------------------------------
     def duplicate_fingerprints(self) -> List[int]:
-        """Fingerprints stored at more than one PBA (inline misses)."""
-        return [fp for fp, pbas in self.fp_table.items() if len(pbas) > 1]
+        """Fingerprints stored at more than one PBA (inline misses).
+
+        Served from the incremental candidate set — no fp_table scan.  The
+        result is sorted so a budgeted merge pass picks the same victims on
+        a live store and on one restored from its snapshot (the set itself
+        carries no usable order across a restore).
+        """
+        return sorted(self._dup_fps)
 
     def merge_fingerprint(self, fp: int) -> int:
         """Collapse all PBAs of ``fp`` onto the canonical (first) PBA.
@@ -288,6 +327,25 @@ class BlockStore:
                 self._free(p)
                 reclaimed += 1
         return reclaimed
+
+    # -- shard migration support ---------------------------------------------------
+    def extract_fp(self, fp: int) -> Optional[List[int]]:
+        """Pop ``fp``'s whole fingerprint-table row (resharding moves it to
+        another shard's store); keeps the index and candidate set coherent."""
+        pbas = self.fp_table.pop(fp, None)
+        if pbas is not None:
+            self.fp_index.discard(fp)
+            self._dup_fps.discard(fp)
+        return pbas
+
+    def absorb_fp(self, fp: int, pbas: List[int]) -> None:
+        """Append a migrated row to ``fp``'s fingerprint-table entry."""
+        lst = self.fp_table.setdefault(fp, [])
+        lst.extend(pbas)
+        if lst:
+            self.fp_index.add(fp)
+        if len(lst) > 1:
+            self._dup_fps.add(fp)
 
     # -- snapshot/restore ----------------------------------------------------------
     def snapshot(self) -> dict:
@@ -319,6 +377,9 @@ class BlockStore:
     def load_snapshot(self, tree: dict) -> None:
         self.lba_map = from_kv3(tree["lba_map"])
         self.fp_table = {int(fp): [int(p) for p in pbas] for fp, pbas in tree["fp_table"]}
+        # derived structures: rebuilt from the serialized table, never stored
+        self.fp_index = FingerprintIndex(self.fp_table)
+        self._dup_fps = {fp for fp, pbas in self.fp_table.items() if len(pbas) > 1}
         self.refcount = from_pairs(tree["refcount"], value=int)
         self.fp_of_pba = from_pairs(tree["fp_of_pba"], value=int)
         self._next_pba = int(tree["next_pba"])
@@ -346,6 +407,10 @@ class BlockStore:
         """Raise AssertionError if internal tables disagree."""
         assert not self._staged_writes and not self._staged_dups, "unflushed staged writes"
         self._ensure_reverse()
+        assert set(self.fp_index) == set(self.fp_table), "fp_index drifted from fp_table"
+        self.fp_index.check_consistency()
+        derived_dups = {fp for fp, pbas in self.fp_table.items() if len(pbas) > 1}
+        assert self._dup_fps == derived_dups, "duplicate-candidate set drifted"
         live = set()
         for fp, pbas in self.fp_table.items():
             assert len(pbas) == len(set(pbas)), f"dup PBAs for fp {fp}"

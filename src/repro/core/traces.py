@@ -21,7 +21,7 @@ Templates: ``mail`` (FIU-mail), ``ftp`` (Cloud-FTP), ``web`` (FIU-web),
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 

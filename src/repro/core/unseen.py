@@ -39,7 +39,7 @@ Two solvers for step 2:
 from __future__ import annotations
 
 import math
-from typing import List, Sequence, Tuple
+from typing import Sequence, Tuple
 
 import numpy as np
 import scipy.optimize

@@ -3,6 +3,8 @@
 * ``fingerprint``  — lane-parallel 128-bit block hashing (the paper's MD5
   fingerprinting loop, rethought for the VPU; DESIGN.md §2).
 * ``histogram``    — fingerprint-frequency histogram (FFH) reduction.
+* ``fp_index``     — exact open-addressing fingerprint-index probe/insert
+  over uint32 lanes (the membership layer under ``core.fp_index``).
 * ``paged_attention`` — decode attention over the dedup-paged KV cache
   (the serving-side hot-spot that HPDedup's page indirection creates).
 
@@ -11,7 +13,20 @@ dispatch); ``ref`` holds pure-jnp oracles plus an independent numpy golden
 model for the hash.
 """
 
-from .ops import ffh_counts, fingerprint_blocks, fingerprint_ints
+from .ops import (
+    ffh_counts,
+    fingerprint_blocks,
+    fingerprint_ints,
+    fp_index_insert,
+    fp_index_probe,
+)
 from .paged_attention import paged_attention
 
-__all__ = ["ffh_counts", "fingerprint_blocks", "fingerprint_ints", "paged_attention"]
+__all__ = [
+    "ffh_counts",
+    "fingerprint_blocks",
+    "fingerprint_ints",
+    "fp_index_insert",
+    "fp_index_probe",
+    "paged_attention",
+]

@@ -1,0 +1,230 @@
+"""Pallas TPU kernel pair: exact fingerprint-index hash-table probe/insert.
+
+The inline phase's hot path is *membership*: "has this fingerprint ever been
+seen / is it cached / is it in the on-disk table?" (paper §III-B/§IV).  The
+host engines answer that with per-fingerprint Python dict ops; this module
+moves the probe loop onto the accelerator as a fixed-layout open-addressing
+hash table over **uint32 lanes**:
+
+* The table is two flat arrays ``table_lo`` / ``table_hi`` of ``uint32``
+  (a 64-bit fingerprint is split into its low/high words — Pallas TPU
+  kernels have no uint64).
+* A key's home slot is a 32-bit avalanche hash of both words masked to the
+  power-of-two *logical* capacity; collisions linear-probe a **bounded
+  window** of ``WINDOW`` consecutive slots.  The physical arrays carry
+  ``WINDOW - 1`` tail-pad slots past the logical capacity, so a probe
+  window is always contiguous — no wraparound in the kernel's inner loop,
+  one dynamic slice per key.
+* ``EMPTY`` (all-zero) and ``TOMBSTONE`` (all-ones) are in-band sentinels;
+  the host wrapper (``repro.core.fp_index``) routes the two colliding key
+  values — 0 and 2^64-1 — to its spill dict, so the table itself never
+  stores them.
+* **Probe** scans each key's whole window and reports a hit iff some slot
+  holds both words — exact membership for every key the table holds, by
+  construction (full 64-bit compare, not a partial-hash filter).
+* **Insert** places each key in the first ``EMPTY``/``TOMBSTONE`` slot of
+  its window (keys are processed sequentially inside one grid step, so
+  there are no write conflicts) and reports per-key status; a full window
+  means *overflow* and the host wrapper spills the key to its host dict —
+  exactness never depends on table capacity.
+
+Like the fingerprint/FFH kernels, both kernels run in interpret mode off
+TPU; the host wrapper's numpy backend implements the identical layout and
+window discipline, and tests/test_fp_index.py pins the two bit-compatible
+(membership-equivalent) against each other.
+
+Known limitations of the TPU path (CPU-validated only — this container has
+no TPU): both kernels stage the whole physical table per grid step, so the
+table must fit VMEM (~2^20 uint32 lanes/core), and the host wrapper ships
+the lane arrays to device per launch.  Production-scale TPU use needs the
+follow-up in ROADMAP terms: a persistent device-resident table (keys-only
+transfer) and a grid that tiles the table, with probe windows handled
+across tile edges.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Bounded linear-probe window: every key lives within WINDOW slots of its
+# home slot or spills to the host.  16 lanes keeps the per-key dynamic
+# slice small while making overflow vanishingly rare below ~60% load.
+WINDOW = 16
+# Keys per probe-kernel grid step.
+TILE_KEYS = 1024
+
+# In-band slot sentinels (lo == hi == the value).
+EMPTY32 = 0
+TOMB32 = 0xFFFFFFFF
+
+# xxhash32 primes, kept as Python ints: Pallas kernels may not capture
+# device-array constants, so every use site casts inline (HLO literals).
+_P1 = 2654435761
+_P2 = 2246822519
+_P3 = 3266489917
+
+
+def slot_hash_host(lo, hi):
+    """Home-slot hash over numpy uint32 arrays — the layout contract.
+
+    Mirrored verbatim (same constants, same 32-bit wraparound) by
+    ``_slot_hash_jnp``; tests assert the two agree so the numpy backend and
+    the kernels probe identical slots.
+    """
+    import numpy as np
+
+    x = (lo ^ np.uint32(0x9E3779B9)) * np.uint32(2654435761)
+    x ^= x >> np.uint32(15)
+    x = (x + hi) * np.uint32(2246822519)
+    x ^= x >> np.uint32(13)
+    x = x * np.uint32(3266489917)
+    return x ^ (x >> np.uint32(16))
+
+
+def _slot_hash_jnp(lo: jnp.ndarray, hi: jnp.ndarray) -> jnp.ndarray:
+    x = (lo ^ jnp.uint32(0x9E3779B9)) * jnp.uint32(_P1)
+    x = x ^ jax.lax.shift_right_logical(x, jnp.uint32(15))
+    x = (x + hi) * jnp.uint32(_P2)
+    x = x ^ jax.lax.shift_right_logical(x, jnp.uint32(13))
+    x = x * jnp.uint32(_P3)
+    return x ^ jax.lax.shift_right_logical(x, jnp.uint32(16))
+
+
+def _probe_kernel(klo_ref, khi_ref, tlo_ref, thi_ref, out_ref, *, cap_mask: int):
+    """Batched membership probe: one contiguous WINDOW load per key."""
+    n = klo_ref.shape[0]
+    klo = klo_ref[...]
+    khi = khi_ref[...]
+    slots = _slot_hash_jnp(klo, khi) & jnp.uint32(cap_mask)
+
+    def body(i, _):
+        slot = slots[i].astype(jnp.int32)
+        wlo = tlo_ref[pl.ds(slot, WINDOW)]
+        whi = thi_ref[pl.ds(slot, WINDOW)]
+        hit = jnp.any((wlo == klo[i]) & (whi == khi[i]))
+        out_ref[pl.ds(i, 1)] = hit.astype(jnp.int32)[None]
+        return 0
+
+    jax.lax.fori_loop(0, n, body, 0)
+
+
+def fp_probe_pallas(
+    keys_lo: jnp.ndarray,
+    keys_hi: jnp.ndarray,
+    table_lo: jnp.ndarray,
+    table_hi: jnp.ndarray,
+    *,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """(N,) int32 membership flags for N split keys against the table.
+
+    ``N`` must be a multiple of TILE_KEYS and the table physically sized
+    ``cap + WINDOW - 1`` with ``cap`` a power of two (ops.py pads/validates).
+    """
+    n = keys_lo.shape[0]
+    phys = table_lo.shape[0]
+    cap = phys - (WINDOW - 1)
+    if cap & (cap - 1):
+        raise ValueError(f"logical capacity {cap} must be a power of two")
+    if n % TILE_KEYS:
+        raise ValueError(f"N={n} must be a multiple of TILE_KEYS={TILE_KEYS}")
+    grid = (n // TILE_KEYS,)
+    return pl.pallas_call(
+        functools.partial(_probe_kernel, cap_mask=cap - 1),
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.int32),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((TILE_KEYS,), lambda i: (i,)),
+            pl.BlockSpec((TILE_KEYS,), lambda i: (i,)),
+            pl.BlockSpec((phys,), lambda i: (0,)),
+            pl.BlockSpec((phys,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((TILE_KEYS,), lambda i: (i,)),
+        interpret=interpret,
+    )(keys_lo, keys_hi, table_lo, table_hi)
+
+
+# Insert statuses.
+PLACED = 0
+PRESENT = 1
+OVERFLOW = 2
+
+
+def _insert_kernel(
+    klo_ref, khi_ref, tlo_in_ref, thi_in_ref, tlo_ref, thi_ref, status_ref, *, cap_mask: int
+):
+    """Sequential batched insert: first-fit within each key's window.
+
+    Keys are placed one at a time inside a single grid step, so a key
+    inserted earlier in the batch is visible (as PRESENT) to later
+    duplicates and two keys sharing a window never claim the same slot.
+    ``tlo_ref``/``thi_ref`` alias the input table buffers (in-place update);
+    all reads and writes go through the output refs.
+    """
+    del tlo_in_ref, thi_in_ref  # aliased with tlo_ref/thi_ref
+    n = klo_ref.shape[0]
+    klo = klo_ref[...]
+    khi = khi_ref[...]
+    slots = _slot_hash_jnp(klo, khi) & jnp.uint32(cap_mask)
+
+    def body(i, _):
+        slot = slots[i].astype(jnp.int32)
+        wlo = tlo_ref[pl.ds(slot, WINDOW)]
+        whi = thi_ref[pl.ds(slot, WINDOW)]
+        match = (wlo == klo[i]) & (whi == khi[i])
+        free = ((wlo == jnp.uint32(EMPTY32)) & (whi == jnp.uint32(EMPTY32))) | (
+            (wlo == jnp.uint32(TOMB32)) & (whi == jnp.uint32(TOMB32))
+        )
+        present = jnp.any(match)
+        has_free = jnp.any(free)
+        # first free lane in the window (argmax of the boolean mask)
+        off = jnp.argmax(free).astype(jnp.int32)
+
+        @pl.when(jnp.logical_and(jnp.logical_not(present), has_free))
+        def _place():
+            tlo_ref[pl.ds(slot + off, 1)] = klo[i][None]
+            thi_ref[pl.ds(slot + off, 1)] = khi[i][None]
+
+        status_ref[pl.ds(i, 1)] = jnp.where(
+            present,
+            jnp.int32(PRESENT),
+            jnp.where(has_free, jnp.int32(PLACED), jnp.int32(OVERFLOW)),
+        )[None]
+        return 0
+
+    jax.lax.fori_loop(0, n, body, 0)
+
+
+def fp_insert_pallas(
+    keys_lo: jnp.ndarray,
+    keys_hi: jnp.ndarray,
+    table_lo: jnp.ndarray,
+    table_hi: jnp.ndarray,
+    *,
+    interpret: bool = False,
+):
+    """Insert N split keys; returns ``(table_lo, table_hi, status)``.
+
+    The whole batch runs in one grid step (sequential first-fit); the table
+    arrays are donated via input/output aliasing so the update is in-place
+    on device.
+    """
+    n = keys_lo.shape[0]
+    phys = table_lo.shape[0]
+    cap = phys - (WINDOW - 1)
+    if cap & (cap - 1):
+        raise ValueError(f"logical capacity {cap} must be a power of two")
+    return pl.pallas_call(
+        functools.partial(_insert_kernel, cap_mask=cap - 1),
+        out_shape=[
+            jax.ShapeDtypeStruct((phys,), jnp.uint32),
+            jax.ShapeDtypeStruct((phys,), jnp.uint32),
+            jax.ShapeDtypeStruct((n,), jnp.int32),
+        ],
+        input_output_aliases={2: 0, 3: 1},
+        interpret=interpret,
+    )(keys_lo, keys_hi, table_lo, table_hi)

@@ -14,6 +14,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from .fingerprint import LANES, NUM_HASHES, TILE_B, fingerprint_pallas
+from .fp_index import TILE_KEYS, fp_insert_pallas, fp_probe_pallas
 from .histogram import NBINS_DEFAULT, TILE, ffh_pallas
 
 
@@ -75,6 +76,49 @@ def fingerprint_ints(blocks, interpret: bool | None = None) -> np.ndarray:
     out = (hi << np.uint64(32)) | (lo & np.uint64(0xFFFFFFFF))
     out[out == 0] = 1  # 0 is reserved
     return out
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def _fp_probe_jit(klo, khi, tlo, thi, interpret: bool) -> jnp.ndarray:
+    return fp_probe_pallas(klo, khi, tlo, thi, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",), donate_argnums=(2, 3))
+def _fp_insert_jit(klo, khi, tlo, thi, interpret: bool):
+    return fp_insert_pallas(klo, khi, tlo, thi, interpret=interpret)
+
+
+def fp_index_probe(keys_lo, keys_hi, table_lo, table_hi, interpret: bool | None = None) -> np.ndarray:
+    """(N,) bool membership flags for split uint32 keys against the table.
+
+    The key batch is padded to the probe kernel's tile (pad keys are the
+    EMPTY sentinel; their flags are sliced off).  Table arrays must be the
+    physical ``cap + WINDOW - 1`` layout (see ``kernels.fp_index``).
+    """
+    n = keys_lo.shape[0]
+    klo = _pad_axis(jnp.asarray(keys_lo, dtype=jnp.uint32), 0, TILE_KEYS)
+    khi = _pad_axis(jnp.asarray(keys_hi, dtype=jnp.uint32), 0, TILE_KEYS)
+    interpret = (not _on_tpu()) if interpret is None else interpret
+    out = _fp_probe_jit(
+        klo, khi, jnp.asarray(table_lo), jnp.asarray(table_hi), interpret
+    )
+    return np.asarray(out[:n], dtype=bool)
+
+
+def fp_index_insert(keys_lo, keys_hi, table_lo, table_hi, interpret: bool | None = None):
+    """Insert split uint32 keys; returns ``(table_lo, table_hi, status)``
+    as numpy arrays (status per ``kernels.fp_index``: PLACED / PRESENT /
+    OVERFLOW).  The input table buffers are donated."""
+    interpret = (not _on_tpu()) if interpret is None else interpret
+    tlo, thi, status = _fp_insert_jit(
+        jnp.asarray(keys_lo, dtype=jnp.uint32),
+        jnp.asarray(keys_hi, dtype=jnp.uint32),
+        jnp.asarray(table_lo),
+        jnp.asarray(table_hi),
+        interpret,
+    )
+    # writable host copies: the index mutates tables in place (tombstones)
+    return np.array(tlo), np.array(thi), np.asarray(status)
 
 
 @functools.partial(jax.jit, static_argnames=("nbins", "interpret"))

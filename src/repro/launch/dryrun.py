@@ -35,7 +35,6 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs import ARCH_IDS, SHAPES, ShapeSpec, get_config
 from repro.models import build_model
-from repro.models.scan_mode import unrolled
 from repro.models import config as C
 from repro.sharding import activation_rules, batch_pspecs, cache_pspecs, param_pspecs, shardings_of
 from repro.train.optimizer import AdamW, AdamWState

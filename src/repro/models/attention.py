@@ -17,7 +17,7 @@ from repro.act_sharding import shard_act
 
 from .scan_mode import scan_unroll
 
-from .layers import Param, ParamFactory, apply_rope
+from .layers import ParamFactory, apply_rope
 
 NEG_INF = -1e30
 

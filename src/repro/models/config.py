@@ -11,7 +11,7 @@ O(layers).
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Tuple
+from typing import Tuple
 
 # mixer kinds
 ATTN = "attn"          # causal full attention

@@ -10,19 +10,17 @@ states).
 
 from __future__ import annotations
 
-from typing import Any, Dict, Tuple
+from typing import Any, Dict
 
 import jax
 import jax.numpy as jnp
 
 from . import config as C
 from .scan_mode import scan_unroll
-from .attention import KVCache, attention_decode, attention_train, init_attention, init_kv_cache
+from .attention import KVCache, attention_decode, attention_train, init_attention
 from .layers import (
     cast_tree,
-    Param,
     ParamFactory,
-    apply_rope,
     init_mlp,
     mlp_apply,
     rms_norm,

@@ -13,8 +13,6 @@ exact per-shape contents.
 
 from __future__ import annotations
 
-import functools
-from typing import Any, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp

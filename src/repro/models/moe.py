@@ -18,7 +18,6 @@ reference in tests/test_moe.py.
 
 from __future__ import annotations
 
-import functools
 from typing import Optional, Tuple
 
 import jax

@@ -26,7 +26,7 @@ character (the "data-dependent decay" in the assignment line).
 
 from __future__ import annotations
 
-from typing import NamedTuple, Tuple
+from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp

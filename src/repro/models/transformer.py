@@ -13,8 +13,7 @@ pytrees stacked the same way as params so decode also scans.
 
 from __future__ import annotations
 
-import functools
-from typing import Any, Dict, List, NamedTuple, Optional, Tuple
+from typing import Any, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp

@@ -21,7 +21,7 @@ smoke configs; the Pallas paged-attention kernel covers the TPU hot path.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, List, Optional, Tuple
+from typing import Any, Dict, List, Tuple
 
 import jax
 import jax.numpy as jnp

@@ -20,7 +20,7 @@ legal in GSPMD but pad silently; we prefer explicit replication).
 
 from __future__ import annotations
 
-from typing import Any, Dict, Optional, Sequence, Tuple
+from typing import Dict, Optional, Sequence, Tuple
 
 import jax
 import numpy as np

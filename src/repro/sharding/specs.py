@@ -13,7 +13,7 @@ Decode-cache policy:
 
 from __future__ import annotations
 
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict
 
 import jax
 from jax.sharding import Mesh, PartitionSpec as P

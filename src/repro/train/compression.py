@@ -18,7 +18,6 @@ EXPERIMENTS.md §Perf (collective-bytes reduction on the pod axis).
 
 from __future__ import annotations
 
-import functools
 from typing import Any, Tuple
 
 import jax

@@ -2,12 +2,12 @@
 
 from __future__ import annotations
 
-from typing import Any, Callable, Dict, Tuple
+from typing import Callable
 
 import jax
 import jax.numpy as jnp
 
-from .optimizer import AdamW, AdamWState, apply_updates
+from .optimizer import AdamW, apply_updates
 
 
 def make_train_step(model, opt: AdamW) -> Callable:

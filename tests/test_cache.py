@@ -1,6 +1,5 @@
 """Cache policies + the LDSS-prioritized cache (paper SIV-B)."""
 
-import numpy as np
 import pytest
 
 pytest.importorskip("hypothesis")

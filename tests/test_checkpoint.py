@@ -6,7 +6,6 @@ import threading
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.ckpt import checkpoint as ckpt
 

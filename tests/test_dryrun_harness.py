@@ -1,7 +1,6 @@
 """Dry-run harness units: collective parsing, input specs, skip rules."""
 
 import jax
-import jax.numpy as jnp
 import pytest
 
 # NOTE: importing repro.launch.dryrun sets XLA_FLAGS (512 devices) but jax is

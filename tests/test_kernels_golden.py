@@ -1,0 +1,112 @@
+"""Golden fingerprint digests + uint8 packing edge cases (ISSUE 5).
+
+Unlike the oracle sweeps in test_kernels.py (which compare two live
+implementations and would *both* drift under an accidental hash change),
+these fixtures pin the exact uint32 kernel outputs for deterministic
+inputs.  The fingerprint is load-bearing identity: every FingerprintIndex
+placement, consistent-hash ring route and stored fingerprint derives from
+it, so a silent change scrambles all of them — this file makes the change
+loud.  Regenerate only for a deliberate hash change:
+
+    PYTHONPATH=src python - <<'PY'
+    import json, numpy as np
+    from repro.kernels.ops import fingerprint_blocks, fingerprint_ints
+    from tests.test_kernels_golden import CONSTRUCTIONS, GOLDEN_PATH
+    cases = []
+    for kind, b, w in [("zeros", 2, 128), ("ones", 2, 128), ("ramp", 4, 256),
+                       ("weyl", 8, 1024), ("weyl", 3, 128)]:
+        x = CONSTRUCTIONS[kind](b, w)
+        cases.append({"kind": kind, "b": b, "w": w,
+                      "digests": np.asarray(fingerprint_blocks(x)).tolist(),
+                      "fp64_hex": [f"{int(v):016x}" for v in fingerprint_ints(x)]})
+    json.dump({"comment": "see test_kernels_golden.py", "cases": cases},
+              open(GOLDEN_PATH, "w"), indent=2)
+    PY
+"""
+
+import json
+import os
+
+import numpy as np
+import pytest
+
+from repro.kernels.ops import fingerprint_blocks, fingerprint_ints
+
+GOLDEN_PATH = os.path.join(os.path.dirname(__file__), "golden", "fingerprint_digests.json")
+
+
+def _weyl(b, w):
+    i = np.arange(b, dtype=np.uint64)[:, None]
+    j = np.arange(w, dtype=np.uint64)[None, :]
+    v = i * np.uint64(2654435761) + j * np.uint64(40503) + np.uint64(1)
+    return (v & np.uint64(0xFFFFFFFF)).astype(np.uint32)
+
+
+CONSTRUCTIONS = {
+    "zeros": lambda b, w: np.zeros((b, w), dtype=np.uint32),
+    "ones": lambda b, w: np.full((b, w), 0xDEADBEEF, dtype=np.uint32),
+    "ramp": lambda b, w: (np.arange(b * w, dtype=np.uint64) % (1 << 32))
+    .astype(np.uint32)
+    .reshape(b, w),
+    "weyl": _weyl,
+}
+
+
+def _golden_cases():
+    with open(GOLDEN_PATH) as f:
+        return json.load(f)["cases"]
+
+
+@pytest.mark.parametrize("case", _golden_cases(), ids=lambda c: f"{c['kind']}_{c['b']}x{c['w']}")
+def test_fingerprint_digests_pinned(case):
+    x = CONSTRUCTIONS[case["kind"]](case["b"], case["w"])
+    dig = np.asarray(fingerprint_blocks(x), dtype=np.uint32)
+    np.testing.assert_array_equal(dig, np.asarray(case["digests"], dtype=np.uint32))
+    fp64 = fingerprint_ints(x)
+    assert [f"{int(v):016x}" for v in fp64] == case["fp64_hex"]
+
+
+# ---------------------------------------------------------------------------
+# uint8 path with non-multiple-of-4 block lengths: the pad-then-bitcast
+# packing in kernels/ops.py must agree with explicitly packed words.
+# ---------------------------------------------------------------------------
+
+
+def _pack_words(x8: np.ndarray) -> np.ndarray:
+    """Reference packing: pad bytes to 4, view little-endian uint32 words."""
+    b, w8 = x8.shape
+    pad = (-w8) % 4
+    padded = np.pad(x8, [(0, 0), (0, pad)])
+    return padded.reshape(b, -1, 4).view("<u4" if np.little_endian else None).reshape(b, -1)
+
+
+@pytest.mark.parametrize("w8", [1, 2, 3, 5, 6, 7, 509, 510, 511, 513])
+def test_uint8_odd_lengths_match_packed_words(w8):
+    rng = np.random.default_rng(w8)
+    x8 = rng.integers(0, 256, size=(8, w8), dtype=np.uint8)
+    from_bytes = np.asarray(fingerprint_blocks(x8))
+    from_words = np.asarray(fingerprint_blocks(_pack_words(x8)))
+    np.testing.assert_array_equal(from_bytes, from_words)
+    # and through the 64-bit fold the engines consume
+    np.testing.assert_array_equal(fingerprint_ints(x8), fingerprint_ints(_pack_words(x8)))
+
+
+def test_uint8_padding_is_zero_not_garbage():
+    """A short block must hash as if zero-padded to the word boundary —
+    trailing-byte content past the pad must not leak in."""
+    x = np.array([[1, 2, 3]], dtype=np.uint8)
+    explicit = np.array([[1, 2, 3, 0]], dtype=np.uint8)
+    np.testing.assert_array_equal(
+        np.asarray(fingerprint_blocks(x)), np.asarray(fingerprint_blocks(explicit))
+    )
+
+
+def test_uint8_tail_byte_sensitivity():
+    """Every byte position in an odd-length block must affect the digest
+    (the packed word's high bytes are real input, not dead padding)."""
+    base = np.zeros((1, 7), dtype=np.uint8)
+    ref = fingerprint_ints(base)[0]
+    for pos in range(7):
+        x = base.copy()
+        x[0, pos] = 0xA5
+        assert fingerprint_ints(x)[0] != ref, f"byte {pos} did not change the digest"

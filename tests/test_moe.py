@@ -6,7 +6,7 @@ import numpy as np
 import pytest
 
 from repro.models.layers import ParamFactory, unzip_params
-from repro.models.moe import _moe_local, init_moe, moe_apply
+from repro.models.moe import init_moe, moe_apply
 
 
 def _dense_ref(params, x, k):

@@ -10,7 +10,7 @@ import pytest
 
 from repro.core import HPDedup
 from repro.core.ldss import StreamLocalityEstimator
-from repro.core.store import BlockStore, DLRUBuffer
+from repro.core.store import DLRUBuffer
 
 GOLDEN_DIR = os.path.join(os.path.dirname(__file__), "golden")
 
@@ -30,6 +30,50 @@ def test_toctou_stale_pba_in_pending_run():
     assert rep.final_disk_blocks == rep.unique_fingerprints
     for (stream, lba), pba in eng.store.lba_map.items():
         assert pba in eng.store.refcount
+
+
+def test_incremental_duplicate_candidates_match_full_scan():
+    """``duplicate_fingerprints`` is served from an incremental candidate
+    set (ISSUE 5) instead of rescanning fp_table per post-processing pass.
+    On an overwrite-heavy trace — overwrites drop refcounts, free PBAs and
+    shrink fp_table rows mid-stream — the candidate *set* must stay
+    identical to a full-table scan at every checkpoint."""
+    from repro.core import ShardedCluster, generate_workload
+
+    rng = np.random.default_rng(42)
+    # tiny cache -> inline misses -> plenty of on-disk duplicates
+    eng = HPDedup(cache_entries=8, postprocess_period=1500)
+    n, streams, lba_space, fp_space = 6_000, 4, 64, 150
+
+    def full_scan(store):
+        return {fp for fp, pbas in store.fp_table.items() if len(pbas) > 1}
+
+    for i in range(n):
+        s = int(rng.integers(streams))
+        # small LBA space: most writes overwrite an earlier mapping
+        eng.write(s, int(rng.integers(lba_space)), int(rng.integers(1, fp_space)))
+        if i % 997 == 0:
+            assert set(eng.store._dup_fps) == full_scan(eng.store)
+            assert sorted(eng.store.duplicate_fingerprints()) == sorted(full_scan(eng.store))
+    eng.inline.flush()
+    assert set(eng.store._dup_fps) == full_scan(eng.store)
+    eng.run_postprocess(max_merges=3)  # budgeted pass: partial merge
+    assert set(eng.store._dup_fps) == full_scan(eng.store)
+    eng.finish()
+    assert eng.store.duplicate_fingerprints() == []
+    eng.store.check_consistency()
+
+    # the batched + sharded path (staged flushes, unmap invalidation,
+    # resharding migration) must maintain the same invariant
+    trace, _ = generate_workload("B", total_requests=5_000, seed=3)
+    cluster = ShardedCluster(num_shards=4, cache_entries=8)
+    cluster.replay_batched(trace)
+    for e in cluster.shards:
+        assert set(e.store._dup_fps) == full_scan(e.store)
+    cluster.resize(2)
+    for e in cluster.shards:
+        assert set(e.store._dup_fps) == full_scan(e.store)
+        e.store.check_consistency()
 
 
 def test_dlru_buffer_dedup_keyed_by_pba():

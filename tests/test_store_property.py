@@ -1,6 +1,5 @@
 """Property tests: block-store invariants + hybrid dedup exactness."""
 
-import numpy as np
 import pytest
 
 pytest.importorskip("hypothesis")

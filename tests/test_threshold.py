@@ -1,6 +1,5 @@
 """Spatial-locality-aware per-stream threshold (paper SIV-C)."""
 
-import numpy as np
 
 from repro.core.threshold import SpatialThreshold
 

@@ -1,6 +1,5 @@
 """Trace generator statistics + the paper's headline comparisons."""
 
-import numpy as np
 import pytest
 
 from repro.core import (
@@ -12,7 +11,6 @@ from repro.core import (
     make_idedup,
     trace_stats,
 )
-from repro.core.fingerprint import OP_WRITE
 
 
 @pytest.mark.parametrize("tpl", ["mail", "ftp", "web", "home"])

@@ -4,7 +4,6 @@ import time
 
 import jax
 import numpy as np
-import pytest
 
 from repro.configs import get_config
 from repro.data.pipeline import DedupIngestPipeline, TenantSpec
