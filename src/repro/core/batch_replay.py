@@ -226,42 +226,54 @@ def engine_finish_replay(engine) -> None:
 # ---------------------------------------------------------------------------
 
 
-def _count_ground_truth_dups(seen, w_fps: np.ndarray):
-    """Batched duplicate-write accounting against the all-time seen index.
+def _launch_dup_count(seen, w_fps: np.ndarray):
+    """Batched duplicate-write accounting against the all-time seen index,
+    split into launch and consume so the device probe overlaps host work.
 
-    Returns (dup_count, uniq, uniq_list, first_idx, inv) from ``np.unique``
-    over the batch's write fingerprints.  ``seen`` is the engine's
+    Returns ``(consume, uniq, first_idx, inv)`` from ``np.unique`` over the
+    batch's write fingerprints.  ``seen`` is the engine's
     ``FingerprintIndex``: the batch's *unique* fingerprints are probed and
     the fresh ones inserted in one ``probe_and_add`` launch against the
-    device-layout hash table — no per-fingerprint Python membership calls
-    on the bulk path; the per-record first-occurrence structure supplies
-    the rest.
+    device-resident hash table — no per-fingerprint Python membership calls
+    on the bulk path.  ``consume()`` yields the batch's duplicate-write
+    count; the index must not be touched before it runs.
     """
     uniq, first_idx, inv = np.unique(w_fps, return_index=True, return_inverse=True)
-    known = seen.probe_and_add(uniq)
-    dups = w_fps.size - int(np.count_nonzero(~known))
-    return dups, uniq, uniq.tolist(), first_idx, inv
+    pending = seen.probe_and_add_async(uniq)
+
+    def consume() -> int:
+        known = pending()
+        return w_fps.size - int(np.count_nonzero(~known))
+
+    return consume, uniq, first_idx, inv
 
 
-def _maybe_hit_flags(cache, uniq, uniq_list, first_idx, inv, nw: int, pending_fps=None) -> np.ndarray:
-    """Per-write-record flags: False means the record *cannot* hit the cache.
+def _launch_maybe_hit(cache, uniq: np.ndarray, first_idx, inv, nw: int):
+    """Per-write-record cache-hit pre-filter, split into launch and consume.
 
-    A record can only hit if its fingerprint was cached at sub-batch start
-    (one batched probe of the cache's ``FingerprintIndex`` over the unique
-    set), appeared earlier in the sub-batch (and may have been admitted on
-    its miss-write), or sits in a pending duplicate run carried over from
-    an earlier batch (a below-threshold or stale-PBA run decision re-admits
-    those mid-bulk).  Lookups are side-effect-free on misses, so skipping
-    definite misses preserves exact cache state.
+    ``consume(pending_fps)`` yields flags where False means the record
+    *cannot* hit the cache: its fingerprint was not cached at sub-batch
+    start (one batched probe of the cache's resident-fingerprint index over
+    the unique set), did not appear earlier in the sub-batch (where it may
+    have been admitted on its miss-write), and is not in a pending
+    duplicate run carried over from an earlier batch (a below-threshold or
+    stale-PBA run decision re-admits those mid-bulk).  Lookups are
+    side-effect-free on misses, so skipping definite misses preserves exact
+    cache state.  The cache must not be mutated before consume runs.
     """
-    in_cache = cache.contains_many(uniq)
-    if pending_fps:
-        in_cache |= np.fromiter(
-            map(pending_fps.__contains__, uniq_list), dtype=bool, count=len(uniq_list)
-        )
-    is_first = np.zeros(nw, dtype=bool)
-    is_first[first_idx] = True
-    return in_cache[inv] | ~is_first
+    pending = cache.contains_many_async(uniq)
+
+    def consume(pending_fps) -> np.ndarray:
+        in_cache = pending()
+        if pending_fps:
+            in_cache |= np.fromiter(
+                map(pending_fps.__contains__, uniq.tolist()), dtype=bool, count=uniq.size
+            )
+        is_first = np.zeros(nw, dtype=bool)
+        is_first[first_idx] = True
+        return in_cache[inv] | ~is_first
+
+    return consume
 
 
 def _certify_staged(store, w_streams: np.ndarray, w_lbas: np.ndarray, pending_keys=None) -> bool:
@@ -356,16 +368,18 @@ def _hpdedup_bulk(hp, rb: ReplayBatch, out: Optional[np.ndarray], base: int) -> 
     maybe_w: Optional[np.ndarray] = None
     staged = False
     if nw:
-        # ground truth for ratio metrics (HPDedup.write's _seen_fps branch)
-        dups, uniq, uniq_list, first_idx, inv = _count_ground_truth_dups(hp._seen_fps, w_fps)
-        hp._dup_writes += dups
+        # launch both index probes first — the seen-set ground truth
+        # (HPDedup.write's _seen_fps branch) and the cache residency
+        # pre-filter — then run the host-only certify/accumulation work
+        # while the device launches are in flight; the consumes land below
+        dups_done, uniq, first_idx, inv = _launch_dup_count(hp._seen_fps, w_fps)
+        maybe_done = _launch_maybe_hit(inline.cache, uniq, first_idx, inv, nw)
         pending_fps = {
             item[1] for run in inline._pending.values() for item in run.items
         }
         pending_keys = {
             (s, item[0]) for s, run in inline._pending.items() for item in run.items
         }
-        maybe_w = _maybe_hit_flags(inline.cache, uniq, uniq_list, first_idx, inv, nw, pending_fps)
         staged = _certify_staged(store, w_streams, w_lbas, pending_keys)
 
         # per-stream grouping, shared by the accumulation and estimator steps
@@ -402,6 +416,11 @@ def _hpdedup_bulk(hp, rb: ReplayBatch, out: Optional[np.ndarray], base: int) -> 
                 res.offer_many(sf[a:b].tolist())
                 est.stream_writes[s] += b - a
             est.writes_in_interval += nw
+
+        # consume the probes launched at the top of the bulk (device work
+        # overlapped the host-side accumulation above)
+        hp._dup_writes += dups_done()
+        maybe_w = maybe_done(pending_fps)
 
     if nr:
         r_uniq, r_counts = np.unique(rb.stream[~is_w], return_counts=True)
@@ -705,11 +724,10 @@ def _diode_bulk(d, rb: ReplayBatch, out: Optional[np.ndarray], base: int) -> Non
     ptype_w: Optional[np.ndarray] = None
     staged = False
     if nw:
-        dups, uniq, uniq_list, first_idx, inv = _count_ground_truth_dups(d._seen, w_fps)
-        d._dup_writes += dups
+        dups_done, uniq, first_idx, inv = _launch_dup_count(d._seen, w_fps)
+        maybe_done = _launch_maybe_hit(d.cache, uniq, first_idx, inv, nw)
         pending_fps = {item[2] for item in d._run}  # (stream, lba, fp, pba)
         pending_keys = {(item[0], item[1]) for item in d._run}
-        maybe_w = _maybe_hit_flags(d.cache, uniq, uniq_list, first_idx, inv, nw, pending_fps)
         staged = _certify_staged(store, w_streams, w_lbas, pending_keys)
 
         # vectorized P-type classification.  is_ptype computes
@@ -723,6 +741,10 @@ def _diode_bulk(d, rb: ReplayBatch, out: Optional[np.ndarray], base: int) -> Non
             per_rec_th = th[np.searchsorted(s_uniq, w_streams)]
             mod_vals = (w_fps % np.uint64(1000)) * np.uint64(2654435761 % 1000) % np.uint64(1000)
             ptype_w = mod_vals < per_rec_th
+
+        # consume the probes launched above (overlapped with certify/P-type)
+        d._dup_writes += dups_done()
+        maybe_w = maybe_done(pending_fps)
 
     m.writes += nw
     d._total_writes += nw
@@ -837,9 +859,9 @@ def _postproc_bulk(pp, rb: ReplayBatch) -> None:
         nw = int(np.count_nonzero(is_w))
     staged = False
     if nw:
-        dups, _, _, _, _ = _count_ground_truth_dups(pp._seen, w_fps)
-        pp._dup_writes += dups
+        dups_done, _, _, _ = _launch_dup_count(pp._seen, w_fps)
         staged = _certify_staged(store, w_streams, w_lbas)
+        pp._dup_writes += dups_done()
     pp._total_writes += nw
     pp.metrics.writes += nw
 

@@ -45,8 +45,12 @@ class LRUCache:
         return v
 
     def insert(self, fp: int, pba: int) -> None:
-        self._d[fp] = pba
-        self._d.move_to_end(fp)
+        d = self._d
+        if fp in d:
+            d[fp] = pba
+            d.move_to_end(fp)
+        else:
+            d[fp] = pba  # a fresh key lands at the MRU end already
 
     def evict_one(self) -> Optional[Tuple[int, int]]:
         if not self._d:
@@ -340,6 +344,12 @@ class GlobalCache:
         (the batched replay pre-pass; does not touch recency/frequency)."""
         return self.index.contains_many(fps)
 
+    def contains_many_async(self, fps):
+        """``contains_many`` split into launch and consume (see
+        ``FingerprintIndex.contains_many_async``); the cache must not be
+        mutated between the two."""
+        return self.index.contains_many_async(fps)
+
     def admit(self, stream: int, fp: int, pba: int) -> None:
         if fp in self.cache:
             self.cache.insert(fp, pba)
@@ -421,6 +431,9 @@ class PrioritizedCache:
         self.index = FingerprintIndex()
         self.ldss: Dict[int, float] = {}
         self._best_ldss = 0.0  # memoized max; recomputed on set_ldss only
+        # per-stream admission verdicts; pure function of ``ldss``, so valid
+        # until the next set_ldss (which clears it)
+        self._adm_memo: Dict[int, bool] = {}
         self.segments = FenwickSegments()
         self.total = 0
         self.inserted = 0
@@ -429,6 +442,7 @@ class PrioritizedCache:
     def set_ldss(self, ldss: Dict[int, float]) -> None:
         self.ldss.update({s: max(float(v), 0.0) for s, v in ldss.items()})
         self._best_ldss = max(self.ldss.values(), default=0.0)
+        self._adm_memo = {}
         self._refresh_weights()
 
     def _refresh_weights(self) -> None:
@@ -475,12 +489,21 @@ class PrioritizedCache:
         (the batched replay pre-pass; does not touch recency/frequency)."""
         return self.index.contains_many(fps)
 
+    def contains_many_async(self, fps):
+        """``contains_many`` split into launch and consume (see
+        ``FingerprintIndex.contains_many_async``); the cache must not be
+        mutated between the two."""
+        return self.index.contains_many_async(fps)
+
     def admit(self, stream: int, fp: int, pba: int) -> None:
         holder = self.owner.get(fp)
         if holder is not None:  # already cached (possibly by another stream)
             self.streams[holder].insert(fp, pba)
             return
-        if not self._admitted(stream):
+        adm = self._adm_memo.get(stream)
+        if adm is None:
+            adm = self._adm_memo[stream] = self._admitted(stream)
+        if not adm:
             return
         sub = self._sub(stream)
         while self.total >= self.capacity:
@@ -560,6 +583,7 @@ class PrioritizedCache:
         self.index = FingerprintIndex(self.owner)
         self.ldss = from_pairs(tree["ldss"], value=float)
         self._best_ldss = float(tree["best_ldss"])
+        self._adm_memo = {}
         self.total = int(tree["total"])
         self.inserted = int(tree["inserted"])
         self.segments = FenwickSegments.from_snapshot(tree["segments"])

@@ -5,13 +5,20 @@ goes through: the inline phase's all-time seen set, the fingerprint cache's
 batched pre-probe, the block store's fingerprint-table membership and the
 cluster's multi-shard scatter probe all hold one of these.  It pairs
 
-* a **device-layout hash table** — the bounded-window open-addressing
+* a **device-layout hash table** — the tiled bounded-window open-addressing
   layout of ``repro.kernels.fp_index``, two uint32 lane arrays probed
-  either by the Pallas kernel pair (TPU, or interpret mode when forced) or
+  either by the Pallas kernel set (TPU, or interpret mode when forced) or
   by a bit-identical vectorized numpy implementation (the CPU fast path) —
   with
 * the **authoritative host state** — the index *is a* ``set`` of Python
   int fingerprints; the set is the ground truth the table accelerates.
+
+On the Pallas backend the lane arrays are **persistent device buffers**:
+insert/remove launches alias them in place and ship keys only, and the
+host ``_t64`` mirror is materialized lazily — only when the host-side
+paths (``_lanes``, ``check_consistency``) actually ask for it.  A rebuild
+(growth, tombstone pressure, restore) resets the table host-side and
+re-uploads on the next device launch.
 
 Exactness contract (property-tested in tests/test_fp_index.py):
 
@@ -25,13 +32,16 @@ Exactness contract (property-tested in tests/test_fp_index.py):
   its table from it, so the snapshot state-tree format is untouched and a
   corrupted table can always be rebuilt host-side.
 
-Scalar mutations (the per-record oracle path) stage into pending buffers —
-native-set speed on the scalar hot path — and are folded into the table
-lazily before the next batched probe.  Batched probes (``contains_many``,
-``probe_and_add``) are one vectorized launch per call; tiny batches fall
-back to the host set, below the size where a vectorized launch wins
-(``small_batch``, set to 0 by tests that want the table path exercised
-unconditionally).
+Mutations stage lazily and fold into the table before the next batched
+probe: scalar add/discard (the per-record oracle path) stage into pending
+dicts at native-set speed, and ``add_many`` stages its whole key array
+into a journal — so bulk insertion costs what the plain host set costs,
+and the table build happens once, vectorized, at the next probe.  Batched
+probes (``contains_many``, ``probe_and_add``) are one vectorized launch
+per call, with ``*_async`` variants that split the launch from the
+consume so device probes overlap host work; tiny batches fall back to the
+host set, below the size where a vectorized launch wins (``small_batch``,
+set to 0 by tests that want the table path exercised unconditionally).
 """
 
 from __future__ import annotations
@@ -40,7 +50,17 @@ from typing import Iterable
 
 import numpy as np
 
-from ..kernels.fp_index import EMPTY32, OVERFLOW, TOMB32, WINDOW, slot_hash_host
+from ..kernels.fp_index import (
+    EMPTY32,
+    OVERFLOW,
+    PLACED_TOMB,
+    TILE_PAD,
+    TOMB32,
+    WINDOW,
+    slot_hash_host,
+    table_phys_len,
+    tile_shape,
+)
 
 EMPTY_KEY = 0  # lo == hi == EMPTY32
 TOMB_KEY = (1 << 64) - 1  # lo == hi == TOMB32
@@ -80,10 +100,16 @@ class FingerprintIndex(set):
 
     __slots__ = (
         "_cap",
+        "_tile_shift",
         "_t64",
+        "_dev_lo",
+        "_dev_hi",
+        "_host_dirty",
         "_spill",
         "_pending_adds",
         "_pending_removes",
+        "_journal",
+        "_journal_n",
         "_table_live",
         "_tombstones",
         "_backend",
@@ -119,34 +145,84 @@ class FingerprintIndex(set):
                 self._backend = "numpy"
         return self._backend == "pallas"
 
+    # -- device-buffer management ----------------------------------------------
+    def _dev_tables(self):
+        """The persistent device lane buffers, uploading the host table on
+        first use (and after a rebuild dropped them)."""
+        if self._dev_lo is None:
+            import jax.numpy as jnp
+
+            tlo, thi = self._host_lanes()
+            self._dev_lo = jnp.asarray(tlo)
+            self._dev_hi = jnp.asarray(thi)
+        return self._dev_lo, self._dev_hi
+
+    def _adopt_dev(self, tlo, thi) -> None:
+        """Keep the in-place-updated buffers a launch returned; the host
+        mirror is now stale and will re-materialize on demand."""
+        self._dev_lo, self._dev_hi = tlo, thi
+        self._host_dirty = True
+
+    def _sync_host(self) -> None:
+        """Materialize the host ``_t64`` mirror from the device buffers."""
+        if self._host_dirty:
+            tlo = np.asarray(self._dev_lo).reshape(-1)
+            thi = np.asarray(self._dev_hi).reshape(-1)
+            self._t64 = (thi.astype(np.uint64) << np.uint64(32)) | tlo.astype(np.uint64)
+            self._host_dirty = False
+
+    def _host_lanes(self):
+        """Host-side lane arrays in the kernels' tiled ``(T, tile_phys)``
+        physical layout (copies, synced from device if needed)."""
+        self._sync_host()
+        tiles, _, tile_phys = tile_shape(self._cap)
+        t2 = self._t64.reshape(tiles, tile_phys)
+        return (t2 & _U32).astype(np.uint32), (t2 >> np.uint64(32)).astype(np.uint32)
+
+    def _lanes(self):
+        """The table as the kernels' two uint32 lane arrays (copies)."""
+        return self._host_lanes()
+
+    def _set_lanes(self, tlo: np.ndarray, thi: np.ndarray) -> None:
+        self._t64 = (
+            (np.asarray(thi).astype(np.uint64) << np.uint64(32))
+            | np.asarray(tlo).astype(np.uint64)
+        ).reshape(-1)
+        self._dev_lo = self._dev_hi = None  # device copy is stale now
+        self._host_dirty = False
+
     # -- table maintenance -----------------------------------------------------
     def _rebuild(self, cap: int) -> None:
         """(Re)build the table from the authoritative set — the restore path
         and the growth path are the same code on purpose.  Folds any pending
-        scalar mutations (the set already reflects them) and clears spill
-        back to what genuinely cannot live in the table."""
-        while len(self) > GROW_LOAD * cap:
+        mutations (the set already reflects them), clears spill back to what
+        genuinely cannot live in the table, and invalidates the device
+        buffers — the next launch re-uploads the fresh table."""
+        n_set = len(self)
+        while n_set > GROW_LOAD * cap:
             cap <<= 1
         self._cap = cap
-        phys = cap + WINDOW - 1
-        # host table: the kernel's two uint32 lane arrays, interleaved into
+        _, tile_cap, _ = tile_shape(cap)
+        self._tile_shift = tile_cap.bit_length() - 1
+        # host table: the kernels' two uint32 lane arrays, interleaved into
         # one uint64 word per slot so the numpy fast path pays one gather
-        # and one compare per probe round (``_lanes``/``_set_lanes``
-        # translate at the Pallas kernel boundary)
-        self._t64 = np.zeros(phys, dtype=np.uint64)
+        # and one compare per probe round (``_lanes`` translates at the
+        # Pallas kernel boundary); flat view of the tiled physical layout
+        self._t64 = np.zeros(table_phys_len(cap), dtype=np.uint64)
+        self._dev_lo = self._dev_hi = None
+        self._host_dirty = False
         self._spill = {k for k in (EMPTY_KEY, TOMB_KEY) if k in self}
         self._pending_adds = {}
         self._pending_removes = {}
+        self._journal = []
+        self._journal_n = 0
         self._table_live = 0
         self._tombstones = 0
-        n = len(self) - len(self._spill)
-        if n:
-            keys = np.fromiter(
-                (k for k in self if k != EMPTY_KEY and k != TOMB_KEY),
-                dtype=np.uint64,
-                count=n,
-            )
-            for a in range(0, n, 1 << 16):
+        if n_set > len(self._spill):
+            keys = np.fromiter(self, dtype=np.uint64, count=n_set)
+            if self._spill:
+                keys = keys[(keys != np.uint64(EMPTY_KEY)) & (keys != np.uint64(TOMB_KEY))]
+            for a in range(0, keys.size, 1 << 16):
                 self._table_insert(keys[a : a + (1 << 16)])
 
     def _grow_if_needed(self, incoming: int) -> bool:
@@ -165,16 +241,43 @@ class FingerprintIndex(set):
         return True
 
     def _flush(self) -> None:
-        """Fold pending scalar mutations into the table (adds and removes
-        are disjoint by construction, so order is irrelevant)."""
-        if not self._pending_adds and not self._pending_removes:
+        """Fold pending mutations into the table.
+
+        Order matters: the scalar pending-add dict holds keys known absent
+        from the table (direct insert), the ``add_many`` journal may hold
+        anything (unique + probe-filter first), and removals fold last so a
+        journaled key that was discarded after staging is inserted and then
+        tombstoned — never left dangling in the table.
+        """
+        if not self._pending_adds and not self._pending_removes and not self._journal:
             return
-        if self._grow_if_needed(len(self._pending_adds)):
-            return  # the rebuild folded both buffers
+        journal_keys = None
+        if self._journal:
+            journal_keys = (
+                self._journal[0] if len(self._journal) == 1 else np.concatenate(self._journal)
+            )
+            journal_keys = np.unique(journal_keys)
+            self._journal = []
+            self._journal_n = 0
+        incoming = len(self._pending_adds) + (journal_keys.size if journal_keys is not None else 0)
+        if self._grow_if_needed(incoming):
+            return  # the rebuild folded every buffer (set is authoritative)
         if self._pending_adds:
             keys = np.fromiter(self._pending_adds, dtype=np.uint64, count=len(self._pending_adds))
             self._pending_adds = {}
             self._table_insert(keys)
+        if journal_keys is not None:
+            special = (journal_keys == np.uint64(EMPTY_KEY)) | (
+                journal_keys == np.uint64(TOMB_KEY)
+            )
+            if special.any():
+                self._spill.update(k for k in journal_keys[special].tolist() if k in self)
+                journal_keys = journal_keys[~special]
+            if journal_keys.size:
+                known = self._table_probe(journal_keys)
+                fresh = journal_keys[~known]
+                if fresh.size:
+                    self._table_insert(fresh)
         if self._pending_removes:
             keys = np.fromiter(
                 self._pending_removes, dtype=np.uint64, count=len(self._pending_removes)
@@ -182,18 +285,14 @@ class FingerprintIndex(set):
             self._pending_removes = {}
             self._table_remove(keys)
 
-    def _lanes(self):
-        """The table as the kernel's two uint32 lane arrays (copies)."""
-        return (self._t64 & _U32).astype(np.uint32), (self._t64 >> np.uint64(32)).astype(
-            np.uint32
-        )
-
-    def _set_lanes(self, tlo: np.ndarray, thi: np.ndarray) -> None:
-        self._t64 = (thi.astype(np.uint64) << np.uint64(32)) | tlo.astype(np.uint64)
-
-    def _home_slots(self, keys: np.ndarray) -> np.ndarray:
+    def _phys_homes(self, keys: np.ndarray) -> np.ndarray:
+        """Physical (flat) home slot per key: logical home mapped through
+        the tiled layout (each tile's row starts TILE_PAD slots later)."""
         lo, hi = _split(keys)
-        return (slot_hash_host(lo, hi) & np.uint32(self._cap - 1)).astype(np.int64)
+        home = (slot_hash_host(lo, hi) & np.uint32(self._cap - 1)).astype(np.int64)
+        if self._cap >> self._tile_shift > 1:
+            home += (home >> self._tile_shift) * TILE_PAD
+        return home
 
     def _table_insert(self, keys: np.ndarray) -> None:
         """Place unique, sentinel-free keys known absent from the table;
@@ -204,18 +303,16 @@ class FingerprintIndex(set):
             from ..kernels.ops import fp_index_insert
 
             lo, hi = _split(keys)
-            tlo, thi, status = fp_index_insert(lo, hi, *self._lanes())
-            self._set_lanes(tlo, thi)
+            tlo, thi = self._dev_tables()
+            tlo, thi, status = fp_index_insert(lo, hi, tlo, thi)
+            self._adopt_dev(tlo, thi)
             over = status == OVERFLOW
             self._table_live += int(keys.size - over.sum())
+            self._tombstones -= int(np.count_nonzero(status == PLACED_TOMB))
             if over.any():
                 self._spill.update(keys[over].tolist())
-            # the kernel's PLACED status doesn't say whether an EMPTY or a
-            # TOMBSTONE slot was consumed — recount tombstones vectorized so
-            # the rebuild trigger agrees with the numpy branch
-            self._tombstones = int(np.count_nonzero(self._t64 == np.uint64(TOMB_KEY)))
             return
-        home = self._home_slots(keys)
+        home = self._phys_homes(keys)
         t64 = self._t64
         tomb = np.uint64(TOMB_KEY)
         for r in range(WINDOW):
@@ -226,15 +323,19 @@ class FingerprintIndex(set):
             free = (cur == 0) | (cur == tomb)
             cand = np.nonzero(free)[0]
             if cand.size:
-                # one winner per distinct slot (first in batch order); losers
-                # probe the next offset, exactly as if the winner had been
-                # inserted before them
-                _, first = np.unique(slot[cand], return_index=True)
-                win = cand[first]
-                wslot = slot[win]
+                # one winner per distinct slot — writing candidates in
+                # *reversed* batch order makes the first-in-batch write
+                # land last and stick; losers (whose slot now holds the
+                # winner) probe the next offset, exactly as if the winner
+                # had been inserted before them
+                rev = cand[::-1]
+                t64[slot[rev]] = keys[rev]
+                won = t64[slot[cand]] == keys[cand]
+                win = cand[won]
                 self._tombstones -= int((cur[win] == tomb).sum())
-                t64[wslot] = keys[win]
                 self._table_live += win.size
+                if win.size == keys.size:
+                    return
                 keep = np.ones(keys.size, dtype=bool)
                 keep[win] = False
                 keys, home = keys[keep], home[keep]
@@ -245,7 +346,18 @@ class FingerprintIndex(set):
         """Tombstone table slots for keys known resident in the table."""
         if keys.size == 0:
             return
-        home = self._home_slots(keys)
+        if self._use_pallas():
+            from ..kernels.ops import fp_index_remove
+
+            lo, hi = _split(keys)
+            tlo, thi = self._dev_tables()
+            tlo, thi, removed = fp_index_remove(lo, hi, tlo, thi)
+            self._adopt_dev(tlo, thi)
+            hits = int(np.count_nonzero(removed))
+            self._table_live -= hits
+            self._tombstones += hits
+            return
+        home = self._phys_homes(keys)
         t64 = self._t64
         for r in range(WINDOW):
             if home.size == 0:
@@ -259,15 +371,29 @@ class FingerprintIndex(set):
                 keep = ~match
                 keys, home = keys[keep], home[keep]
 
-    def _table_probe(self, keys: np.ndarray) -> np.ndarray:
-        """Exact membership of sentinel-free keys against table + spill."""
+    def _table_probe_launch(self, keys: np.ndarray):
+        """Start an exact membership probe of sentinel-free keys against
+        table + spill; returns a zero-arg consumer producing the flags.
+
+        On the Pallas backend the kernel launch is dispatched immediately
+        and materialized only in the consumer, so the device probe overlaps
+        whatever host work runs in between (jax async dispatch).  The numpy
+        backend computes eagerly — there is nothing to overlap with.
+        """
         if self._use_pallas():
             from ..kernels.ops import fp_index_probe
 
             lo, hi = _split(keys)
-            found = fp_index_probe(lo, hi, *self._lanes())
+            tlo, thi = self._dev_tables()
+
+            def consume(out=fp_index_probe(lo, hi, tlo, thi)):
+                return self._spill_fixup(keys, out)
+
+            return consume
+        if self._table_live == 0:
+            found = np.zeros(keys.size, dtype=bool)
         else:
-            home = self._home_slots(keys)
+            home = self._phys_homes(keys)
             found = np.zeros(keys.size, dtype=bool)
             idx = np.arange(keys.size)
             rem = keys
@@ -286,6 +412,10 @@ class FingerprintIndex(set):
                 if not undecided.any():
                     break
                 idx, rem, home = idx[undecided], rem[undecided], home[undecided]
+        out = self._spill_fixup(keys, found)
+        return lambda: out
+
+    def _spill_fixup(self, keys: np.ndarray, found: np.ndarray) -> np.ndarray:
         # consult the spill set unless it holds nothing but sentinel keys
         # (sentinel-free probe keys can never match those)
         spill = self._spill
@@ -297,24 +427,76 @@ class FingerprintIndex(set):
                 )
         return found
 
+    def _table_probe(self, keys: np.ndarray) -> np.ndarray:
+        return self._table_probe_launch(keys)()
+
     # -- batched API -----------------------------------------------------------
-    def contains_many(self, fps) -> np.ndarray:
-        """Side-effect-free batched membership probe."""
+    def contains_many_async(self, fps):
+        """Batched membership probe, split into launch and consume.
+
+        Returns a zero-arg callable producing the (N,) bool flags.  The
+        index must not be mutated between launch and consume.
+        """
         keys = np.ascontiguousarray(fps, dtype=np.uint64)
         n = keys.size
         if n == 0:
-            return np.zeros(0, dtype=bool)
+            out = np.zeros(0, dtype=bool)
+            return lambda: out
         if n <= self.small_batch:
-            return np.fromiter(map(self.__contains__, keys.tolist()), dtype=bool, count=n)
+            out = np.fromiter(map(self.__contains__, keys.tolist()), dtype=bool, count=n)
+            return lambda: out
         self._flush()
-        out = self._table_probe(keys)
+        consume = self._table_probe_launch(keys)
         special = (keys == np.uint64(EMPTY_KEY)) | (keys == np.uint64(TOMB_KEY))
-        if special.any():
+        if not special.any():
+            return consume
+
+        def consume_special():
+            out = consume()
             si = np.nonzero(special)[0]
             out[si] = np.fromiter(
                 (int(keys[i]) in self._spill for i in si), dtype=bool, count=si.size
             )
-        return out
+            return out
+
+        return consume_special
+
+    def contains_many(self, fps) -> np.ndarray:
+        """Side-effect-free batched membership probe."""
+        return self.contains_many_async(fps)()
+
+    def probe_and_add_async(self, uniq: np.ndarray):
+        """``probe_and_add`` split into launch and consume (see
+        ``contains_many_async``); insertion happens at consume time."""
+        uniq = np.ascontiguousarray(uniq, dtype=np.uint64)
+        pending = self.contains_many_async(uniq)
+
+        def consume():
+            known = pending()
+            fresh = uniq[~known]
+            if fresh.size == 0:
+                return known
+            super(FingerprintIndex, self).update(fresh.tolist())
+            if fresh.size <= self.small_batch:
+                # stage through the pending buffer like scalar adds (the keys
+                # are not in the set yet per `known`, so the invariant holds)
+                for k in fresh.tolist():
+                    if k == EMPTY_KEY or k == TOMB_KEY:
+                        self._spill.add(k)
+                    elif k in self._pending_removes:
+                        del self._pending_removes[k]
+                    else:
+                        self._pending_adds[k] = None
+                return known
+            special = (fresh == np.uint64(EMPTY_KEY)) | (fresh == np.uint64(TOMB_KEY))
+            if special.any():
+                self._spill.update(fresh[special].tolist())
+                fresh = fresh[~special]
+            if not self._grow_if_needed(fresh.size):
+                self._table_insert(fresh)
+            return known
+
+        return consume
 
     def probe_and_add(self, uniq: np.ndarray) -> np.ndarray:
         """One batched membership query + insertion of the missing keys.
@@ -323,36 +505,21 @@ class FingerprintIndex(set):
         *pre-insert* membership flags — the inline pre-pass's ground-truth
         duplicate accounting in a single launch.
         """
-        uniq = np.ascontiguousarray(uniq, dtype=np.uint64)
-        known = self.contains_many(uniq)
-        fresh = uniq[~known]
-        if fresh.size == 0:
-            return known
-        super().update(fresh.tolist())
-        if fresh.size <= self.small_batch:
-            # stage through the pending buffer like scalar adds (the keys
-            # are not in the set yet per `known`, so the invariant holds)
-            for k in fresh.tolist():
-                if k == EMPTY_KEY or k == TOMB_KEY:
-                    self._spill.add(k)
-                elif k in self._pending_removes:
-                    del self._pending_removes[k]
-                else:
-                    self._pending_adds[k] = None
-            return known
-        special = (fresh == np.uint64(EMPTY_KEY)) | (fresh == np.uint64(TOMB_KEY))
-        if special.any():
-            self._spill.update(fresh[special].tolist())
-            fresh = fresh[~special]
-        if not self._grow_if_needed(fresh.size):
-            self._table_insert(fresh)
-        return known
+        return self.probe_and_add_async(uniq)()
 
     def add_many(self, fps) -> None:
-        """Batched insert (duplicates in the batch are fine)."""
+        """Batched insert (duplicates in the batch are fine).
+
+        Costs one host-set update; the table build is journaled and folded
+        lazily at the next batched probe (unique + probe-filter + one
+        vectorized insert), so bulk insertion runs at native set speed.
+        """
         keys = np.ascontiguousarray(fps, dtype=np.uint64)
-        if keys.size:
-            self.probe_and_add(np.unique(keys))
+        if keys.size == 0:
+            return
+        super().update(keys.tolist())
+        self._journal.append(keys.copy())
+        self._journal_n += keys.size
 
     def remove_many(self, fps) -> None:
         """Batched removal; keys not present are ignored."""
@@ -389,11 +556,19 @@ class FingerprintIndex(set):
         if fp not in self:
             return
         super().discard(fp)
-        if fp in self._spill:
+        if fp == EMPTY_KEY or fp == TOMB_KEY:
+            # sentinels only ever live in spill (or an unfolded journal —
+            # the fold re-checks set membership, so dropping it here is
+            # enough either way)
+            self._spill.discard(fp)
+        elif fp in self._spill:
             self._spill.discard(fp)
         elif fp in self._pending_adds:
             del self._pending_adds[fp]  # never reached the table
         else:
+            # either physically in the table, or sitting in an unfolded
+            # journal; the flush folds journals before removals, so this
+            # stays correct in both cases
             self._pending_removes[fp] = None
 
     def remove(self, fp: int) -> None:
@@ -465,13 +640,15 @@ class FingerprintIndex(set):
             "live": self._table_live,
             "tombstones": self._tombstones,
             "spilled": len(self._spill),
-            "pending": len(self._pending_adds) + len(self._pending_removes),
+            "pending": len(self._pending_adds) + len(self._pending_removes) + self._journal_n,
             "backend": self._backend,
+            "device_resident": self._dev_lo is not None,
         }
 
     def check_consistency(self) -> None:
         """Assert the derived structures exactly re-derive the set."""
         self._flush()
+        self._sync_host()
         decoded = self._t64
         occupied = decoded[(decoded != EMPTY_KEY) & (decoded != TOMB_KEY)]
         table_keys = set(occupied.tolist())

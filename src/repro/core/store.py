@@ -180,8 +180,15 @@ class BlockStore:
                     dup_add(fp)
             if fresh_fps:
                 self.fp_index.add_many(fresh_fps)
-            # fresh PBAs start at refcount 1 (the write's own LBA mapping)
-            self.refcount.update(dict.fromkeys([p for _, p in sw], 1))
+            # fresh PBAs start at refcount 1 (the write's own LBA mapping).
+            # Staged PBAs are allocated monotonically, so within one batch
+            # they almost always form one contiguous range — dict.fromkeys
+            # over the range skips materializing the PBA list entirely.
+            p0, p1 = sw[0][1], sw[-1][1]
+            if p1 - p0 + 1 == len(sw):
+                self.refcount.update(dict.fromkeys(range(p0, p1 + 1), 1))
+            else:
+                self.refcount.update(dict.fromkeys([p for _, p in sw], 1))
             self.live_blocks += len(sw)
             self.peak_blocks = max(self.peak_blocks, self.live_blocks)
             self.disk_writes += len(sw)

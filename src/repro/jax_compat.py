@@ -1,0 +1,55 @@
+"""Version-compatibility shims over jax's sharding API surface.
+
+The production meshes and the sharded model code target the modern jax API
+(``jax.make_mesh(..., axis_types=...)``, ``jax.shard_map(..., check_vma=...)``)
+but must also run on jax 0.4.x containers, where ``jax.sharding.AxisType``
+does not exist, ``shard_map`` lives in ``jax.experimental`` and its
+replication check is spelled ``check_rep``.  Everything that builds meshes or
+shard-maps goes through this module so the version probe lives in one place.
+"""
+
+from __future__ import annotations
+
+import jax
+
+_HAS_AXIS_TYPES = hasattr(jax.sharding, "AxisType")
+_HAS_JAX_SHARD_MAP = hasattr(jax, "shard_map")
+
+
+def auto_axis_types(n: int):
+    """``(AxisType.Auto,) * n`` on jax >= 0.6, ``None`` where the concept
+    (and the ``axis_types=`` kwarg) does not exist."""
+    if _HAS_AXIS_TYPES:
+        return (jax.sharding.AxisType.Auto,) * n
+    return None
+
+
+def make_mesh(axis_shapes, axis_names, *, axis_types=None, devices=None):
+    """``jax.make_mesh`` with ``axis_types`` dropped on jax versions that
+    predate it (pre-AxisType jax treats every axis as Auto anyway)."""
+    kwargs = {}
+    if devices is not None:
+        kwargs["devices"] = devices
+    if _HAS_AXIS_TYPES and axis_types is not None:
+        kwargs["axis_types"] = axis_types
+    return jax.make_mesh(axis_shapes, axis_names, **kwargs)
+
+
+def axis_size(axis_name):
+    """``jax.lax.axis_size`` where it exists; the classic ``psum(1, axis)``
+    spelling (a compile-time constant, no runtime collective) otherwise."""
+    if hasattr(jax.lax, "axis_size"):
+        return jax.lax.axis_size(axis_name)
+    return jax.lax.psum(1, axis_name)
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma=None):
+    """``jax.shard_map`` where it exists; the ``jax.experimental`` spelling
+    (whose replication check is ``check_rep``) otherwise."""
+    if _HAS_JAX_SHARD_MAP:
+        kwargs = {} if check_vma is None else {"check_vma": check_vma}
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, **kwargs)
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    kwargs = {} if check_vma is None else {"check_rep": check_vma}
+    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, **kwargs)

@@ -19,6 +19,7 @@ from .ops import (
     fingerprint_ints,
     fp_index_insert,
     fp_index_probe,
+    fp_index_remove,
 )
 from .paged_attention import paged_attention
 
@@ -28,5 +29,6 @@ __all__ = [
     "fingerprint_ints",
     "fp_index_insert",
     "fp_index_probe",
+    "fp_index_remove",
     "paged_attention",
 ]

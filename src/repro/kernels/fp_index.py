@@ -1,4 +1,4 @@
-"""Pallas TPU kernel pair: exact fingerprint-index hash-table probe/insert.
+"""Pallas TPU kernels: exact fingerprint-index hash-table probe/insert/remove.
 
 The inline phase's hot path is *membership*: "has this fingerprint ever been
 seen / is it cached / is it in the on-disk table?" (paper §III-B/§IV).  The
@@ -6,40 +6,51 @@ host engines answer that with per-fingerprint Python dict ops; this module
 moves the probe loop onto the accelerator as a fixed-layout open-addressing
 hash table over **uint32 lanes**:
 
-* The table is two flat arrays ``table_lo`` / ``table_hi`` of ``uint32``
-  (a 64-bit fingerprint is split into its low/high words — Pallas TPU
-  kernels have no uint64).
+* The table is two arrays ``table_lo`` / ``table_hi`` of ``uint32`` (a
+  64-bit fingerprint is split into its low/high words — Pallas TPU kernels
+  have no uint64).
 * A key's home slot is a 32-bit avalanche hash of both words masked to the
   power-of-two *logical* capacity; collisions linear-probe a **bounded
-  window** of ``WINDOW`` consecutive slots.  The physical arrays carry
-  ``WINDOW - 1`` tail-pad slots past the logical capacity, so a probe
-  window is always contiguous — no wraparound in the kernel's inner loop,
-  one dynamic slice per key.
+  window** of ``WINDOW`` consecutive slots.
+* The logical slots are laid out in **tiles** of ``TILE_SLOTS`` slots, and
+  each tile carries ``TILE_PAD`` tail-pad slots past its logical end
+  (``TILE_PAD >= WINDOW - 1``), so a probe window is always contiguous
+  *within one tile* — no wraparound and no cross-tile windows in the
+  kernel's inner loop, one dynamic slice per key.  The physical arrays are
+  shaped ``(num_tiles, TILE_SLOTS + TILE_PAD)``; logical home slot ``h``
+  lives at row ``h // TILE_SLOTS``, column ``h % TILE_SLOTS``.
+* The grid runs **one table tile per grid row**: each grid step stages a
+  single tile (not the whole table) in VMEM, so logical capacity is bounded
+  by HBM, not VMEM.  The host wrapper routes each key to its home tile
+  (sort-by-tile + pad, see ``kernels.ops``); tiles are mutually
+  independent because windows never cross tile edges.
 * ``EMPTY`` (all-zero) and ``TOMBSTONE`` (all-ones) are in-band sentinels;
   the host wrapper (``repro.core.fp_index``) routes the two colliding key
-  values — 0 and 2^64-1 — to its spill dict, so the table itself never
-  stores them.
+  values — 0 and 2^64-1 — to its spill set, so the table itself never
+  stores them.  Key batches are padded to the tile grid with ``EMPTY``
+  keys, which every kernel skips (``valid`` guard).
 * **Probe** scans each key's whole window and reports a hit iff some slot
   holds both words — exact membership for every key the table holds, by
   construction (full 64-bit compare, not a partial-hash filter).
 * **Insert** places each key in the first ``EMPTY``/``TOMBSTONE`` slot of
-  its window (keys are processed sequentially inside one grid step, so
-  there are no write conflicts) and reports per-key status; a full window
-  means *overflow* and the host wrapper spills the key to its host dict —
-  exactness never depends on table capacity.
+  its window (keys are processed sequentially inside each tile, so there
+  are no write conflicts) and reports per-key status; a full window means
+  *overflow* and the host wrapper spills the key — exactness never depends
+  on table capacity.  The status distinguishes placement into an EMPTY
+  slot from consuming a TOMBSTONE, so the host tracks its tombstone count
+  without reading the table back.
+* **Remove** tombstones the matching slot (keys known resident only).
 
-Like the fingerprint/FFH kernels, both kernels run in interpret mode off
-TPU; the host wrapper's numpy backend implements the identical layout and
-window discipline, and tests/test_fp_index.py pins the two bit-compatible
-(membership-equivalent) against each other.
+The table arrays live on device and are updated in place: insert/remove
+alias their table inputs to their table outputs (``input_output_aliases``),
+so steady-state launches ship **keys only** — the host wrapper keeps the
+returned device buffers for the next launch and materializes a host mirror
+only when the numpy path or a consistency check asks for one.
 
-Known limitations of the TPU path (CPU-validated only — this container has
-no TPU): both kernels stage the whole physical table per grid step, so the
-table must fit VMEM (~2^20 uint32 lanes/core), and the host wrapper ships
-the lane arrays to device per launch.  Production-scale TPU use needs the
-follow-up in ROADMAP terms: a persistent device-resident table (keys-only
-transfer) and a grid that tiles the table, with probe windows handled
-across tile edges.
+Like the fingerprint/FFH kernels, all kernels run in interpret mode off
+TPU; the host wrapper's numpy backend implements the identical physical
+layout and window discipline, and tests/test_fp_index.py pins the two
+membership-equivalent against each other.
 """
 
 from __future__ import annotations
@@ -54,8 +65,15 @@ from jax.experimental import pallas as pl
 # home slot or spills to the host.  16 lanes keeps the per-key dynamic
 # slice small while making overflow vanishingly rare below ~60% load.
 WINDOW = 16
-# Keys per probe-kernel grid step.
+# Keys per grid step (second grid dimension tiles the key batch).
 TILE_KEYS = 1024
+# Logical slots per table tile: one grid step stages one tile in VMEM
+# (2 lane arrays x (TILE_SLOTS + TILE_PAD) x 4B ~ 260 KiB), so the table's
+# logical capacity is HBM-bound.
+TILE_SLOTS = 1 << 15
+# Per-tile tail pad.  Must be >= WINDOW - 1 (non-wrapping windows); 128
+# keeps every tile row a multiple of the TPU lane count.
+TILE_PAD = 128
 
 # In-band slot sentinels (lo == hi == the value).
 EMPTY32 = 0
@@ -66,6 +84,36 @@ TOMB32 = 0xFFFFFFFF
 _P1 = 2654435761
 _P2 = 2246822519
 _P3 = 3266489917
+
+
+def tile_shape(cap: int):
+    """``(num_tiles, tile_cap, tile_phys)`` for logical capacity ``cap``.
+
+    ``cap`` must be a power of two.  Tables at or below ``TILE_SLOTS`` are a
+    single tile (``tile_cap == cap``); larger tables split into
+    ``cap // TILE_SLOTS`` tiles of ``TILE_SLOTS`` logical slots each.
+    """
+    if cap & (cap - 1):
+        raise ValueError(f"logical capacity {cap} must be a power of two")
+    tile_cap = min(cap, TILE_SLOTS)
+    return cap // tile_cap, tile_cap, tile_cap + TILE_PAD
+
+
+def table_phys_len(cap: int) -> int:
+    """Total physical slots (flat) for logical capacity ``cap``."""
+    t, _, tile_phys = tile_shape(cap)
+    return t * tile_phys
+
+
+def phys_slots(home, cap: int):
+    """Physical (flat) slot index of each logical home slot.
+
+    The layout contract shared by the numpy backend and the kernels: tile
+    ``h // tile_cap`` starts ``TILE_PAD`` slots later per preceding tile.
+    Accepts and returns integer numpy arrays.
+    """
+    _, tile_cap, _ = tile_shape(cap)
+    return home + (home // tile_cap) * TILE_PAD
 
 
 def slot_hash_host(lo, hi):
@@ -94,19 +142,37 @@ def _slot_hash_jnp(lo: jnp.ndarray, hi: jnp.ndarray) -> jnp.ndarray:
     return x ^ jax.lax.shift_right_logical(x, jnp.uint32(16))
 
 
-def _probe_kernel(klo_ref, khi_ref, tlo_ref, thi_ref, out_ref, *, cap_mask: int):
-    """Batched membership probe: one contiguous WINDOW load per key."""
-    n = klo_ref.shape[0]
-    klo = klo_ref[...]
-    khi = khi_ref[...]
-    slots = _slot_hash_jnp(klo, khi) & jnp.uint32(cap_mask)
+def _check_tiled(keys_lo, table_lo):
+    t, k = keys_lo.shape
+    tt, tile_phys = table_lo.shape
+    tile_cap = tile_phys - TILE_PAD
+    if t != tt:
+        raise ValueError(f"key rows {t} != table tiles {tt}")
+    if tile_cap <= 0 or tile_cap & (tile_cap - 1):
+        raise ValueError(f"tile capacity {tile_cap} must be a positive power of two")
+    if k % TILE_KEYS:
+        raise ValueError(f"keys per tile {k} must be a multiple of TILE_KEYS={TILE_KEYS}")
+    return t, k, tile_cap, tile_phys
+
+
+def _probe_kernel(klo_ref, khi_ref, tlo_ref, thi_ref, out_ref, *, tile_mask: int):
+    """Batched membership probe: one contiguous WINDOW load per key.
+
+    The key's in-tile home is its global home masked to the tile capacity
+    (tile capacities divide the global capacity, both powers of two); the
+    host routed the key to this tile, so only the low bits matter here.
+    """
+    klo = klo_ref[0, :]
+    khi = khi_ref[0, :]
+    n = klo.shape[0]
+    slots = _slot_hash_jnp(klo, khi) & jnp.uint32(tile_mask)
 
     def body(i, _):
         slot = slots[i].astype(jnp.int32)
-        wlo = tlo_ref[pl.ds(slot, WINDOW)]
-        whi = thi_ref[pl.ds(slot, WINDOW)]
+        wlo = tlo_ref[0, pl.ds(slot, WINDOW)]
+        whi = thi_ref[0, pl.ds(slot, WINDOW)]
         hit = jnp.any((wlo == klo[i]) & (whi == khi[i]))
-        out_ref[pl.ds(i, 1)] = hit.astype(jnp.int32)[None]
+        out_ref[0, pl.ds(i, 1)] = hit.astype(jnp.int32)[None]
         return 0
 
     jax.lax.fori_loop(0, n, body, 0)
@@ -120,79 +186,88 @@ def fp_probe_pallas(
     *,
     interpret: bool = False,
 ) -> jnp.ndarray:
-    """(N,) int32 membership flags for N split keys against the table.
+    """(T, K) int32 membership flags for tile-routed split keys.
 
-    ``N`` must be a multiple of TILE_KEYS and the table physically sized
-    ``cap + WINDOW - 1`` with ``cap`` a power of two (ops.py pads/validates).
+    ``keys_*`` are ``(T, K)`` — row ``t`` holds the keys whose home slot
+    lives in table tile ``t``, EMPTY-padded to ``K`` (a multiple of
+    TILE_KEYS).  ``table_*`` are the physical ``(T, tile_cap + TILE_PAD)``
+    lane arrays.  Pad-key flags are garbage (an EMPTY key "matches" any
+    empty slot); the caller slices them off.
     """
-    n = keys_lo.shape[0]
-    phys = table_lo.shape[0]
-    cap = phys - (WINDOW - 1)
-    if cap & (cap - 1):
-        raise ValueError(f"logical capacity {cap} must be a power of two")
-    if n % TILE_KEYS:
-        raise ValueError(f"N={n} must be a multiple of TILE_KEYS={TILE_KEYS}")
-    grid = (n // TILE_KEYS,)
+    t, k, tile_cap, tile_phys = _check_tiled(keys_lo, table_lo)
+    grid = (t, k // TILE_KEYS)
     return pl.pallas_call(
-        functools.partial(_probe_kernel, cap_mask=cap - 1),
-        out_shape=jax.ShapeDtypeStruct((n,), jnp.int32),
+        functools.partial(_probe_kernel, tile_mask=tile_cap - 1),
+        out_shape=jax.ShapeDtypeStruct((t, k), jnp.int32),
         grid=grid,
         in_specs=[
-            pl.BlockSpec((TILE_KEYS,), lambda i: (i,)),
-            pl.BlockSpec((TILE_KEYS,), lambda i: (i,)),
-            pl.BlockSpec((phys,), lambda i: (0,)),
-            pl.BlockSpec((phys,), lambda i: (0,)),
+            pl.BlockSpec((1, TILE_KEYS), lambda i, j: (i, j)),
+            pl.BlockSpec((1, TILE_KEYS), lambda i, j: (i, j)),
+            pl.BlockSpec((1, tile_phys), lambda i, j: (i, 0)),
+            pl.BlockSpec((1, tile_phys), lambda i, j: (i, 0)),
         ],
-        out_specs=pl.BlockSpec((TILE_KEYS,), lambda i: (i,)),
+        out_specs=pl.BlockSpec((1, TILE_KEYS), lambda i, j: (i, j)),
         interpret=interpret,
     )(keys_lo, keys_hi, table_lo, table_hi)
 
 
 # Insert statuses.
-PLACED = 0
-PRESENT = 1
-OVERFLOW = 2
+PLACED = 0  # consumed an EMPTY slot
+PRESENT = 1  # key already in its window (pad keys also report PRESENT)
+OVERFLOW = 2  # window full -> host spill
+PLACED_TOMB = 3  # consumed a TOMBSTONE slot
 
 
 def _insert_kernel(
-    klo_ref, khi_ref, tlo_in_ref, thi_in_ref, tlo_ref, thi_ref, status_ref, *, cap_mask: int
+    klo_ref, khi_ref, tlo_in_ref, thi_in_ref, tlo_ref, thi_ref, status_ref, *, tile_mask: int
 ):
     """Sequential batched insert: first-fit within each key's window.
 
-    Keys are placed one at a time inside a single grid step, so a key
-    inserted earlier in the batch is visible (as PRESENT) to later
+    Keys are placed one at a time inside each tile (grid steps over one
+    tile's key blocks run back-to-back on the same resident table block),
+    so a key inserted earlier in the batch is visible (as PRESENT) to later
     duplicates and two keys sharing a window never claim the same slot.
     ``tlo_ref``/``thi_ref`` alias the input table buffers (in-place update);
     all reads and writes go through the output refs.
     """
     del tlo_in_ref, thi_in_ref  # aliased with tlo_ref/thi_ref
-    n = klo_ref.shape[0]
-    klo = klo_ref[...]
-    khi = khi_ref[...]
-    slots = _slot_hash_jnp(klo, khi) & jnp.uint32(cap_mask)
+    klo = klo_ref[0, :]
+    khi = khi_ref[0, :]
+    n = klo.shape[0]
+    slots = _slot_hash_jnp(klo, khi) & jnp.uint32(tile_mask)
 
     def body(i, _):
+        kl = klo[i]
+        kh = khi[i]
+        valid = jnp.logical_not((kl == jnp.uint32(EMPTY32)) & (kh == jnp.uint32(EMPTY32)))
         slot = slots[i].astype(jnp.int32)
-        wlo = tlo_ref[pl.ds(slot, WINDOW)]
-        whi = thi_ref[pl.ds(slot, WINDOW)]
-        match = (wlo == klo[i]) & (whi == khi[i])
-        free = ((wlo == jnp.uint32(EMPTY32)) & (whi == jnp.uint32(EMPTY32))) | (
-            (wlo == jnp.uint32(TOMB32)) & (whi == jnp.uint32(TOMB32))
-        )
+        wlo = tlo_ref[0, pl.ds(slot, WINDOW)]
+        whi = thi_ref[0, pl.ds(slot, WINDOW)]
+        match = (wlo == kl) & (whi == kh)
+        empty = (wlo == jnp.uint32(EMPTY32)) & (whi == jnp.uint32(EMPTY32))
+        tomb = (wlo == jnp.uint32(TOMB32)) & (whi == jnp.uint32(TOMB32))
         present = jnp.any(match)
-        has_free = jnp.any(free)
-        # first free lane in the window (argmax of the boolean mask)
-        off = jnp.argmax(free).astype(jnp.int32)
+        # first free lane, and whether it is a tombstone (argmax of a bool
+        # mask is its first True; WINDOW = "none")
+        first_empty = jnp.where(jnp.any(empty), jnp.argmax(empty), WINDOW).astype(jnp.int32)
+        first_tomb = jnp.where(jnp.any(tomb), jnp.argmax(tomb), WINDOW).astype(jnp.int32)
+        off = jnp.minimum(first_empty, first_tomb)
+        has_free = off < WINDOW
+        took_tomb = first_tomb < first_empty
 
-        @pl.when(jnp.logical_and(jnp.logical_not(present), has_free))
+        @pl.when(valid & jnp.logical_not(present) & has_free)
         def _place():
-            tlo_ref[pl.ds(slot + off, 1)] = klo[i][None]
-            thi_ref[pl.ds(slot + off, 1)] = khi[i][None]
+            tlo_ref[0, pl.ds(slot + off, 1)] = kl[None]
+            thi_ref[0, pl.ds(slot + off, 1)] = kh[None]
 
-        status_ref[pl.ds(i, 1)] = jnp.where(
-            present,
+        status_ref[0, pl.ds(i, 1)] = jnp.where(
+            jnp.logical_not(valid) | present,
             jnp.int32(PRESENT),
-            jnp.where(has_free, jnp.int32(PLACED), jnp.int32(OVERFLOW)),
+            jnp.where(
+                has_free,
+                jnp.where(took_tomb, jnp.int32(PLACED_TOMB), jnp.int32(PLACED)),
+                jnp.int32(OVERFLOW),
+            ),
         )[None]
         return 0
 
@@ -207,23 +282,104 @@ def fp_insert_pallas(
     *,
     interpret: bool = False,
 ):
-    """Insert N split keys; returns ``(table_lo, table_hi, status)``.
+    """Insert tile-routed split keys; returns ``(table_lo, table_hi, status)``.
 
-    The whole batch runs in one grid step (sequential first-fit); the table
-    arrays are donated via input/output aliasing so the update is in-place
-    on device.
+    Same key/table layout as ``fp_probe_pallas``.  The table arrays are
+    updated in place on device (input/output aliasing) — steady-state
+    launches transfer keys only.  EMPTY pad keys are skipped (status
+    PRESENT).
     """
-    n = keys_lo.shape[0]
-    phys = table_lo.shape[0]
-    cap = phys - (WINDOW - 1)
-    if cap & (cap - 1):
-        raise ValueError(f"logical capacity {cap} must be a power of two")
+    t, k, tile_cap, tile_phys = _check_tiled(keys_lo, table_lo)
+    grid = (t, k // TILE_KEYS)
     return pl.pallas_call(
-        functools.partial(_insert_kernel, cap_mask=cap - 1),
+        functools.partial(_insert_kernel, tile_mask=tile_cap - 1),
         out_shape=[
-            jax.ShapeDtypeStruct((phys,), jnp.uint32),
-            jax.ShapeDtypeStruct((phys,), jnp.uint32),
-            jax.ShapeDtypeStruct((n,), jnp.int32),
+            jax.ShapeDtypeStruct((t, tile_phys), jnp.uint32),
+            jax.ShapeDtypeStruct((t, tile_phys), jnp.uint32),
+            jax.ShapeDtypeStruct((t, k), jnp.int32),
+        ],
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, TILE_KEYS), lambda i, j: (i, j)),
+            pl.BlockSpec((1, TILE_KEYS), lambda i, j: (i, j)),
+            pl.BlockSpec((1, tile_phys), lambda i, j: (i, 0)),
+            pl.BlockSpec((1, tile_phys), lambda i, j: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, tile_phys), lambda i, j: (i, 0)),
+            pl.BlockSpec((1, tile_phys), lambda i, j: (i, 0)),
+            pl.BlockSpec((1, TILE_KEYS), lambda i, j: (i, j)),
+        ],
+        input_output_aliases={2: 0, 3: 1},
+        interpret=interpret,
+    )(keys_lo, keys_hi, table_lo, table_hi)
+
+
+def _remove_kernel(
+    klo_ref, khi_ref, tlo_in_ref, thi_in_ref, tlo_ref, thi_ref, status_ref, *, tile_mask: int
+):
+    """Tombstone the matching slot of each (resident) key."""
+    del tlo_in_ref, thi_in_ref  # aliased with tlo_ref/thi_ref
+    klo = klo_ref[0, :]
+    khi = khi_ref[0, :]
+    n = klo.shape[0]
+    slots = _slot_hash_jnp(klo, khi) & jnp.uint32(tile_mask)
+
+    def body(i, _):
+        kl = klo[i]
+        kh = khi[i]
+        valid = jnp.logical_not((kl == jnp.uint32(EMPTY32)) & (kh == jnp.uint32(EMPTY32)))
+        slot = slots[i].astype(jnp.int32)
+        wlo = tlo_ref[0, pl.ds(slot, WINDOW)]
+        whi = thi_ref[0, pl.ds(slot, WINDOW)]
+        match = (wlo == kl) & (whi == kh)
+        found = jnp.any(match)
+        off = jnp.argmax(match).astype(jnp.int32)
+
+        @pl.when(valid & found)
+        def _tombstone():
+            tlo_ref[0, pl.ds(slot + off, 1)] = jnp.uint32(TOMB32)[None]
+            thi_ref[0, pl.ds(slot + off, 1)] = jnp.uint32(TOMB32)[None]
+
+        status_ref[0, pl.ds(i, 1)] = (valid & found).astype(jnp.int32)[None]
+        return 0
+
+    jax.lax.fori_loop(0, n, body, 0)
+
+
+def fp_remove_pallas(
+    keys_lo: jnp.ndarray,
+    keys_hi: jnp.ndarray,
+    table_lo: jnp.ndarray,
+    table_hi: jnp.ndarray,
+    *,
+    interpret: bool = False,
+):
+    """Remove tile-routed split keys; returns ``(table_lo, table_hi, status)``.
+
+    ``status`` is 1 where a slot was tombstoned, 0 otherwise (pad keys and
+    misses).  In-place on device, keys-only transfer, like insert.
+    """
+    t, k, tile_cap, tile_phys = _check_tiled(keys_lo, table_lo)
+    grid = (t, k // TILE_KEYS)
+    return pl.pallas_call(
+        functools.partial(_remove_kernel, tile_mask=tile_cap - 1),
+        out_shape=[
+            jax.ShapeDtypeStruct((t, tile_phys), jnp.uint32),
+            jax.ShapeDtypeStruct((t, tile_phys), jnp.uint32),
+            jax.ShapeDtypeStruct((t, k), jnp.int32),
+        ],
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, TILE_KEYS), lambda i, j: (i, j)),
+            pl.BlockSpec((1, TILE_KEYS), lambda i, j: (i, j)),
+            pl.BlockSpec((1, tile_phys), lambda i, j: (i, 0)),
+            pl.BlockSpec((1, tile_phys), lambda i, j: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, tile_phys), lambda i, j: (i, 0)),
+            pl.BlockSpec((1, tile_phys), lambda i, j: (i, 0)),
+            pl.BlockSpec((1, TILE_KEYS), lambda i, j: (i, j)),
         ],
         input_output_aliases={2: 0, 3: 1},
         interpret=interpret,

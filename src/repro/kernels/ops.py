@@ -14,7 +14,14 @@ import jax.numpy as jnp
 import numpy as np
 
 from .fingerprint import LANES, NUM_HASHES, TILE_B, fingerprint_pallas
-from .fp_index import TILE_KEYS, fp_insert_pallas, fp_probe_pallas
+from .fp_index import (
+    TILE_KEYS,
+    TILE_PAD,
+    fp_insert_pallas,
+    fp_probe_pallas,
+    fp_remove_pallas,
+    slot_hash_host,
+)
 from .histogram import NBINS_DEFAULT, TILE, ffh_pallas
 
 
@@ -88,37 +95,98 @@ def _fp_insert_jit(klo, khi, tlo, thi, interpret: bool):
     return fp_insert_pallas(klo, khi, tlo, thi, interpret=interpret)
 
 
+@functools.partial(jax.jit, static_argnames=("interpret",), donate_argnums=(2, 3))
+def _fp_remove_jit(klo, khi, tlo, thi, interpret: bool):
+    return fp_remove_pallas(klo, khi, tlo, thi, interpret=interpret)
+
+
+def _route_keys(keys_lo, keys_hi, num_tiles: int, tile_cap: int):
+    """Group split keys by home tile for the tiled kernels.
+
+    Returns ``(klo2d, khi2d, flat_pos)``: ``(T, K)`` EMPTY-padded key
+    arrays (row ``t`` holds tile ``t``'s keys in batch order) and the flat
+    position of each input key inside them, for scattering per-key kernel
+    outputs back to batch order.  ``K`` is the max per-tile count rounded
+    up to TILE_KEYS — per-tile routing is what lets each grid step stage a
+    single table tile instead of the whole table.
+    """
+    klo = np.ascontiguousarray(keys_lo, dtype=np.uint32)
+    khi = np.ascontiguousarray(keys_hi, dtype=np.uint32)
+    n = klo.size
+    if num_tiles == 1:
+        k = max(TILE_KEYS, -(-n // TILE_KEYS) * TILE_KEYS)
+        klo2 = np.zeros((1, k), dtype=np.uint32)
+        khi2 = np.zeros((1, k), dtype=np.uint32)
+        klo2[0, :n] = klo
+        khi2[0, :n] = khi
+        return klo2, khi2, np.arange(n, dtype=np.int64)
+    mask = np.uint32(num_tiles * tile_cap - 1)
+    tile = (slot_hash_host(klo, khi) & mask) // np.uint32(tile_cap)
+    order = np.argsort(tile, kind="stable")
+    counts = np.bincount(tile, minlength=num_tiles)
+    k = max(TILE_KEYS, -(-int(counts.max()) // TILE_KEYS) * TILE_KEYS)
+    starts = np.cumsum(counts) - counts
+    sorted_tile = tile[order]
+    pos = np.arange(n, dtype=np.int64) - starts[sorted_tile]
+    flat_sorted = sorted_tile.astype(np.int64) * k + pos
+    klo2 = np.zeros((num_tiles, k), dtype=np.uint32)
+    khi2 = np.zeros((num_tiles, k), dtype=np.uint32)
+    klo2.reshape(-1)[flat_sorted] = klo[order]
+    khi2.reshape(-1)[flat_sorted] = khi[order]
+    flat_pos = np.empty(n, dtype=np.int64)
+    flat_pos[order] = flat_sorted
+    return klo2, khi2, flat_pos
+
+
+def _table_pair(table_lo, table_hi):
+    tlo = jnp.asarray(table_lo)
+    thi = jnp.asarray(table_hi)
+    if tlo.ndim != 2:
+        raise ValueError(f"table must be the tiled (T, tile_cap + TILE_PAD) layout, got {tlo.shape}")
+    return tlo, thi, tlo.shape[0], tlo.shape[1] - TILE_PAD
+
+
 def fp_index_probe(keys_lo, keys_hi, table_lo, table_hi, interpret: bool | None = None) -> np.ndarray:
     """(N,) bool membership flags for split uint32 keys against the table.
 
-    The key batch is padded to the probe kernel's tile (pad keys are the
-    EMPTY sentinel; their flags are sliced off).  Table arrays must be the
-    physical ``cap + WINDOW - 1`` layout (see ``kernels.fp_index``).
+    ``table_lo``/``table_hi`` are the tiled physical lane arrays, shape
+    ``(T, tile_cap + TILE_PAD)`` (see ``kernels.fp_index``) — device
+    buffers stay resident; only the keys travel.  Keys are routed to their
+    home tiles host-side and padded per tile (pad keys are the EMPTY
+    sentinel; their flags are dropped in the scatter-back).
     """
-    n = keys_lo.shape[0]
-    klo = _pad_axis(jnp.asarray(keys_lo, dtype=jnp.uint32), 0, TILE_KEYS)
-    khi = _pad_axis(jnp.asarray(keys_hi, dtype=jnp.uint32), 0, TILE_KEYS)
+    tlo, thi, num_tiles, tile_cap = _table_pair(table_lo, table_hi)
+    klo2, khi2, flat_pos = _route_keys(keys_lo, keys_hi, num_tiles, tile_cap)
     interpret = (not _on_tpu()) if interpret is None else interpret
-    out = _fp_probe_jit(
-        klo, khi, jnp.asarray(table_lo), jnp.asarray(table_hi), interpret
-    )
-    return np.asarray(out[:n], dtype=bool)
+    out = _fp_probe_jit(jnp.asarray(klo2), jnp.asarray(khi2), tlo, thi, interpret)
+    return np.asarray(out).reshape(-1)[flat_pos] != 0
 
 
 def fp_index_insert(keys_lo, keys_hi, table_lo, table_hi, interpret: bool | None = None):
-    """Insert split uint32 keys; returns ``(table_lo, table_hi, status)``
-    as numpy arrays (status per ``kernels.fp_index``: PLACED / PRESENT /
-    OVERFLOW).  The input table buffers are donated."""
+    """Insert split uint32 keys; returns ``(table_lo, table_hi, status)``.
+
+    The returned table arrays are **device buffers** (the donated inputs,
+    updated in place) — callers keep them resident for the next launch and
+    only materialize a host mirror on demand.  ``status`` is a (N,) numpy
+    array in batch order (PLACED / PRESENT / OVERFLOW / PLACED_TOMB per
+    ``kernels.fp_index``)."""
+    tlo, thi, num_tiles, tile_cap = _table_pair(table_lo, table_hi)
+    klo2, khi2, flat_pos = _route_keys(keys_lo, keys_hi, num_tiles, tile_cap)
     interpret = (not _on_tpu()) if interpret is None else interpret
-    tlo, thi, status = _fp_insert_jit(
-        jnp.asarray(keys_lo, dtype=jnp.uint32),
-        jnp.asarray(keys_hi, dtype=jnp.uint32),
-        jnp.asarray(table_lo),
-        jnp.asarray(table_hi),
-        interpret,
-    )
-    # writable host copies: the index mutates tables in place (tombstones)
-    return np.array(tlo), np.array(thi), np.asarray(status)
+    tlo, thi, status = _fp_insert_jit(jnp.asarray(klo2), jnp.asarray(khi2), tlo, thi, interpret)
+    return tlo, thi, np.asarray(status).reshape(-1)[flat_pos]
+
+
+def fp_index_remove(keys_lo, keys_hi, table_lo, table_hi, interpret: bool | None = None):
+    """Tombstone split uint32 keys; returns ``(table_lo, table_hi, removed)``.
+
+    Like ``fp_index_insert``: device-resident in-place update, keys-only
+    transfer.  ``removed`` is a (N,) bool numpy array in batch order."""
+    tlo, thi, num_tiles, tile_cap = _table_pair(table_lo, table_hi)
+    klo2, khi2, flat_pos = _route_keys(keys_lo, keys_hi, num_tiles, tile_cap)
+    interpret = (not _on_tpu()) if interpret is None else interpret
+    tlo, thi, status = _fp_remove_jit(jnp.asarray(klo2), jnp.asarray(khi2), tlo, thi, interpret)
+    return tlo, thi, np.asarray(status).reshape(-1)[flat_pos] != 0
 
 
 @functools.partial(jax.jit, static_argnames=("nbins", "interpret"))

@@ -9,6 +9,8 @@ from __future__ import annotations
 
 import jax
 
+from repro.jax_compat import auto_axis_types, make_mesh
+
 
 def make_production_mesh(*, multi_pod: bool = False):
     """16x16 single pod (256 chips) or 2x16x16 two-pod (512 chips) mesh.
@@ -18,14 +20,14 @@ def make_production_mesh(*, multi_pod: bool = False):
     """
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return make_mesh(shape, axes, axis_types=auto_axis_types(len(axes)))
 
 
 def make_host_mesh(model_axis: int = 1):
     """Tiny mesh over whatever devices exist (tests / smoke runs)."""
     n = len(jax.devices())
     data = n // model_axis
-    return jax.make_mesh(
+    return make_mesh(
         (data, model_axis), ("data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto,) * 2,
+        axis_types=auto_axis_types(2),
     )

@@ -287,9 +287,114 @@ def test_overflow_spill_consulted_when_sentinels_also_spilled():
             ks.append(k)
         k += 1
     idx.add_many(np.array(ks, dtype=np.uint64))
+    idx.check_consistency()  # fold the journaled insert so the overflow spills
     assert idx.spilled() == 1  # exactly one overflow spill
     for extra in (EMPTY_KEY, TOMB_KEY):
         idx.add(extra)
         flags = idx.contains_many(np.array(ks, dtype=np.uint64))
         np.testing.assert_array_equal(flags, np.ones(len(ks), bool))
+    idx.check_consistency()
+
+
+# ---------------------------------------------------------------------------
+# Edge paths: rebuild/growth racing staged mutations, spill/sentinel removal.
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("backend", ["numpy", "pallas"])
+def test_tombstone_rebuild_with_pending_mutations_in_flight(backend):
+    """Tombstone pressure (> cap/4) triggers a rebuild at the next flush.
+    The rebuild must fold staged-but-unflushed mutations — a scalar-add
+    pending dict, a journaled ``add_many``, and scalar discards — instead
+    of dropping them with the tombstones."""
+    rng = np.random.default_rng(23)
+    idx = FingerprintIndex(capacity=256, small_batch=0, backend=backend)
+    ks = np.unique(_keys(rng, 170))
+    idx.add_many(ks)
+    idx.contains_many(ks)  # fold the journal so removals hit table slots
+    cap = idx.table_stats()["capacity"]  # the fold may have grown the table
+    # tombstone well past the cap//4 rebuild threshold, but don't flush yet
+    drop = ks[: cap // 4 + 12]
+    assert drop.size < ks.size
+    idx.remove_many(drop)
+    assert idx.table_stats()["tombstones"] > cap // 4
+    oracle = set(ks.tolist()) - set(drop.tolist())
+    # stage every mutation flavour while the rebuild is pending
+    fresh = np.unique(_keys(rng, 64))
+    idx.add_many(fresh)  # journaled
+    oracle.update(fresh.tolist())
+    for k in ks[-8:].tolist():  # scalar re-adds of still-present keys
+        idx.add(k)
+    for k in drop[:4].tolist():  # scalar re-adds of tombstoned keys
+        idx.add(k)
+        oracle.add(k)
+    for k in ks[-4:].tolist():  # scalar discards staged behind the re-adds
+        idx.discard(k)
+        oracle.discard(k)
+    # the flush inside this batched probe performs the tombstone rebuild
+    probe = np.concatenate([ks, drop, fresh, _keys(rng, 256)])
+    got = idx.contains_many(probe)
+    want = np.fromiter((int(k) in oracle for k in probe), dtype=bool, count=probe.size)
+    np.testing.assert_array_equal(got, want)
+    assert idx.table_stats()["tombstones"] <= cap // 4  # pressure actually relieved
+    assert set(idx) == oracle
+    idx.check_consistency()
+
+
+def test_remove_many_of_spilled_and_sentinel_keys():
+    """``remove_many`` over a batch mixing window-overflow spills, both
+    sentinel keys, table-resident keys, and absent keys: spills and
+    sentinels leave the spill set, residents tombstone, absents no-op."""
+    cap = 128
+    idx = FingerprintIndex(capacity=cap, small_batch=0)
+    ks, target, k = [], None, 1
+    while len(ks) < WINDOW + 1:  # WINDOW+1 keys sharing one home slot
+        lo = np.uint32(k & 0xFFFFFFFF)
+        hi = np.uint32(k >> 32)
+        h = int(slot_hash_host(np.array([lo]), np.array([hi]))[0]) & (cap - 1)
+        if target is None:
+            target = h
+        if h == target:
+            ks.append(k)
+        k += 1
+    idx.add_many(np.array(ks, dtype=np.uint64))
+    idx.add(EMPTY_KEY)
+    idx.add(TOMB_KEY)
+    idx.contains_many(np.array(ks, dtype=np.uint64))  # fold -> overflow spills
+    assert idx.spilled() == 3  # one overflow + two sentinels
+    absent = np.array([999_999_999], dtype=np.uint64)
+    batch = np.concatenate(
+        [np.array([EMPTY_KEY, TOMB_KEY], dtype=np.uint64), np.array(ks, dtype=np.uint64), absent]
+    )
+    idx.remove_many(batch)
+    assert idx.spilled() == 0
+    assert len(idx) == 0
+    np.testing.assert_array_equal(idx.contains_many(batch), np.zeros(batch.size, bool))
+    idx.check_consistency()
+
+
+@pytest.mark.parametrize("backend", ["numpy", "pallas"])
+def test_grow_during_probe_and_add(backend):
+    """A single ``probe_and_add`` batch large enough to force a capacity
+    rebuild mid-call: the returned flags must still be exact (known keys
+    flagged, fresh keys inserted once) against the host oracle."""
+    rng = np.random.default_rng(29)
+    idx = FingerprintIndex(capacity=128, small_batch=0, backend=backend)
+    cap0 = idx.table_stats()["capacity"]
+    seed = np.unique(_keys(rng, 30))
+    idx.add_many(seed)
+    oracle = set(seed.tolist())
+    # one batch several times the current capacity: the flush inside
+    # probe_and_add must grow before inserting the fresh tail
+    batch = np.unique(np.concatenate([seed, _keys(rng, 4 * cap0)]))
+    known = idx.probe_and_add(batch)
+    want_known = np.fromiter(
+        (int(k) in oracle for k in batch), dtype=bool, count=batch.size
+    )
+    np.testing.assert_array_equal(known, want_known)
+    assert idx.table_stats()["capacity"] > cap0  # the grow actually happened
+    oracle.update(batch.tolist())
+    assert set(idx) == oracle
+    # every key (pre-grow residents and post-grow inserts) probes present
+    np.testing.assert_array_equal(idx.contains_many(batch), np.ones(batch.size, bool))
     idx.check_consistency()
