@@ -6,12 +6,12 @@ Prints ``name,us_per_call,derived`` CSV rows (per the repo convention):
 primary timing where meaningful (0 for ratio-style results), ``derived``
 packs the figure's headline quantity.
 
-``--suite`` runs the four standalone gated benches (replay throughput,
-cluster scaling, resharding, fingerprint index) as subprocesses — each
-still writes its own ``BENCH_*.json`` — and merges every payload plus each
-bench's gate verdict into one ``BENCH_summary.json``, so the perf
-trajectory across PRs is one file instead of four.  Exit code 1 if any
-bench's gate failed.
+``--suite`` runs the five standalone gated benches (replay throughput,
+cluster scaling, resharding, fingerprint index, serving latency) as
+subprocesses — each still writes its own ``BENCH_*.json`` — and merges
+every payload plus each bench's gate verdict into one
+``BENCH_summary.json``, so the perf trajectory across PRs is one file
+instead of five.  Exit code 1 if any bench's gate failed.
 
 Usage:
     PYTHONPATH=src python -m benchmarks.run [--full] [--only fig6,...]
@@ -35,6 +35,7 @@ SUITE = [
     ("replay", "benchmarks/replay_throughput.py", "BENCH_replay.json"),
     ("cluster", "benchmarks/cluster_scaling.py", "BENCH_cluster.json"),
     ("resharding", "benchmarks/resharding.py", "BENCH_resharding.json"),
+    ("serving", "benchmarks/serving_latency.py", "BENCH_serving.json"),
 ]
 
 

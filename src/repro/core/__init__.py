@@ -36,7 +36,13 @@ from .batch_replay import (
     run_replay,
 )
 from .cache import ARCCache, GlobalCache, LFUCache, LRUCache, PrioritizedCache
-from .cluster import ConsistentHashRing, ShardedCluster, aggregate_reports
+from .cluster import (
+    ConsistentHashRing,
+    ParallelShardExecutor,
+    ShardedCluster,
+    ShardWorkerError,
+    aggregate_reports,
+)
 from .ffh import ffh_from_counts, ffh_from_sample, occurrence_counts
 from .fingerprint import OP_READ, OP_WRITE, TRACE_DTYPE, host_fingerprint
 from .fp_index import FingerprintIndex

@@ -146,9 +146,13 @@ class ReplayBatch:
 
 
 def run_replay(engine, trace: np.ndarray, batched: bool = True,
-               batch_size: int = DEFAULT_BATCH_SIZE):
-    """Drive any Engine over a merged trace; batched when the engine supports it."""
+               batch_size: int = DEFAULT_BATCH_SIZE, parallel: bool = False):
+    """Drive any Engine over a merged trace; batched when the engine supports
+    it.  ``parallel=True`` additionally runs cluster shards on worker threads
+    (engines without an executor — the single-node ones — ignore it)."""
     if batched and hasattr(engine, "replay_batched"):
+        if parallel and hasattr(engine, "start_executor"):
+            return engine.replay_batched(trace, batch_size=batch_size, parallel=True)
         return engine.replay_batched(trace, batch_size=batch_size)
     return engine.replay(trace)
 

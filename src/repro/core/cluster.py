@@ -34,6 +34,13 @@ cluster without code changes:
   chunk touches a key written in the same chunk, and replay the chunk's
   routing per record otherwise, so batched routing is exactly the scalar
   routing and per-shard record sequences are identical in both paths.
+* **Parallel execution** — ``start_executor()`` attaches a
+  ``ParallelShardExecutor``: one long-lived worker thread per shard, a
+  pipelined coordinator that routes/scatters chunk k+1 while the shards
+  drain chunk k, and a deterministic barrier-and-merge (``_sync``) before
+  anything reads or migrates shard state.  Per-shard sub-batch sequences
+  are identical to the serial path's, so ``HybridReport``, snapshots and
+  every differential harness stay bit-exact (tests/test_parallel_cluster).
 * **Post-processing** — the exact phase runs *shard-locally*
   (CASStor-style idle cleanup windows): ``run_postprocess`` sweeps every
   shard, optionally budgeted per shard (``max_merges_per_shard``), and
@@ -61,6 +68,8 @@ allocate from that range again.
 
 from __future__ import annotations
 
+import queue
+import threading
 from typing import Callable, Dict, List, Optional, Sequence
 
 import numpy as np
@@ -126,6 +135,117 @@ class ConsistentHashRing:
 
     def shard_of(self, key: int) -> int:
         return int(self.shard_of_many(np.asarray([key], dtype=np.uint64))[0])
+
+
+_SHUTDOWN = object()
+
+
+class ShardWorkerError(RuntimeError):
+    """A shard worker thread raised mid-replay.
+
+    The shard's engine state is undefined past the failing sub-batch, so the
+    error is *sticky*: every later ``barrier()`` re-raises until the executor
+    is closed (recover by discarding the cluster and restoring the last
+    snapshot, exactly like a failed ``resize``)."""
+
+
+class ParallelShardExecutor:
+    """One long-lived worker thread per shard, with a deterministic barrier.
+
+    The concurrency model (ARCHITECTURE.md, "Concurrency model"):
+
+    * **Thread ownership** — between a ``submit`` and the next ``barrier``,
+      shard ``s``'s engine is touched *only* by worker thread ``s``.  Shards
+      share no mutable state (disjoint fingerprint partitions, stores, caches,
+      RNGs), so workers never need locks; numpy/JAX device launches inside a
+      shard drop the GIL and overlap across workers.
+    * **Ordering** — each worker drains its own FIFO queue, so a shard
+      executes exactly the sub-batch sequence the coordinator submitted, in
+      order.  That sequence is identical to the serial path's, which is the
+      whole determinism argument: per-shard engine state — and therefore
+      ``HybridReport``, snapshots and every differential harness — is
+      bit-exact regardless of how the OS schedules the workers.
+    * **Backpressure** — queues are bounded (``max_queued`` work items per
+      shard); a coordinator that routes faster than shards drain blocks in
+      ``submit``, which caps pipeline memory at ``max_queued`` chunks.
+    * **Errors** — a worker exception is recorded, the worker keeps draining
+      (so barriers never deadlock) but skips all further work for that shard,
+      and the next ``barrier``/``submit`` raises ``ShardWorkerError``.
+    """
+
+    def __init__(self, num_shards: int, max_queued: int = 4, name: str = "shard"):
+        if num_shards < 1:
+            raise ValueError(f"num_shards must be >= 1, got {num_shards}")
+        self.num_shards = num_shards
+        self._queues: List[queue.Queue] = [queue.Queue(maxsize=max_queued) for _ in range(num_shards)]
+        self._errors: List[Optional[BaseException]] = [None] * num_shards
+        self._closed = False
+        self._threads = [
+            threading.Thread(target=self._worker, args=(s,), name=f"{name}-{s}", daemon=True)
+            for s in range(num_shards)
+        ]
+        for t in self._threads:
+            t.start()
+
+    def _worker(self, s: int) -> None:
+        q = self._queues[s]
+        while True:
+            item = q.get()
+            if item is _SHUTDOWN:
+                return
+            if isinstance(item, threading.Event):
+                item.set()  # barrier marker: always answered, even after errors
+                continue
+            if self._errors[s] is None:
+                try:
+                    item()
+                except BaseException as e:  # noqa: BLE001 - re-raised at barrier
+                    self._errors[s] = e
+
+    def _check_errors(self) -> None:
+        for s, e in enumerate(self._errors):
+            if e is not None:
+                raise ShardWorkerError(
+                    f"shard {s} worker failed: {e!r}; shard state is undefined "
+                    "— discard the cluster and restore from the last snapshot"
+                ) from e
+
+    def submit(self, shard: int, fn: Callable[[], object]) -> None:
+        """Enqueue ``fn`` on shard ``shard``'s worker (FIFO per shard).
+        Blocks when the shard's queue is full (backpressure)."""
+        if self._closed:
+            raise RuntimeError("executor is closed")
+        self._check_errors()
+        self._queues[shard].put(fn)
+
+    def barrier(self) -> None:
+        """Wait until every worker has drained its queue; re-raise the first
+        worker error.  After ``barrier`` returns, the coordinator may touch
+        shard engines directly (report/snapshot/resize/scalar paths)."""
+        if self._closed:
+            raise RuntimeError("executor is closed")
+        events = [threading.Event() for _ in range(self.num_shards)]
+        for q, ev in zip(self._queues, events):
+            q.put(ev)
+        for ev in events:
+            ev.wait()
+        self._check_errors()
+
+    def close(self) -> None:
+        """Shut the workers down (queued work still drains first)."""
+        if self._closed:
+            return
+        self._closed = True
+        for q in self._queues:
+            q.put(_SHUTDOWN)
+        for t in self._threads:
+            t.join()
+
+    def __enter__(self) -> "ParallelShardExecutor":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
 
 
 def aggregate_reports(reports: Sequence[HybridReport]) -> HybridReport:
@@ -212,6 +332,39 @@ class ShardedCluster:
         # accrued counters stay part of the cluster's aggregate report
         self._retired_reports: List[HybridReport] = []
         self.shard_reports: Optional[List[HybridReport]] = None
+        # optional thread-per-shard executor (``start_executor``); None means
+        # every entry point runs shards serially on the calling thread
+        self._executor: Optional[ParallelShardExecutor] = None
+
+    # -- parallel execution --------------------------------------------------------
+    def start_executor(self, max_queued: int = 4) -> ParallelShardExecutor:
+        """Attach a ``ParallelShardExecutor`` (one worker thread per shard).
+
+        While attached, ``write_batch`` / ``ingest_batched`` /
+        ``replay_batched`` scatter per-shard work onto the workers and the
+        coordinator pipelines: chunk k+1 is routed and scattered while the
+        shards drain chunk k.  The caller owns the lifecycle — call
+        ``stop_executor()`` when done (``resize`` restarts it automatically
+        because the shard count changes)."""
+        if self._executor is None:
+            self._executor = ParallelShardExecutor(self.num_shards, max_queued=max_queued)
+        return self._executor
+
+    def stop_executor(self) -> None:
+        """Drain outstanding work, then stop and detach the worker threads."""
+        ex, self._executor = self._executor, None
+        if ex is not None:
+            try:
+                ex.barrier()
+            finally:
+                ex.close()
+
+    def _sync(self) -> None:
+        """Barrier-and-merge point: wait for all in-flight shard work before
+        the coordinator touches shard engines (reports, snapshots, resize,
+        scalar paths, probes).  No-op without an executor."""
+        if self._executor is not None:
+            self._executor.barrier()
 
     def _make_shard_engine(self, shard: int):
         """Build shard ``shard``'s engine in the next unused PBA namespace
@@ -302,6 +455,7 @@ class ShardedCluster:
         keys = np.ascontiguousarray(fps, dtype=np.uint64)
         if keys.size == 0:
             return np.zeros(0, dtype=bool)
+        self._sync()  # probes read engine state the workers may be mutating
         if self.num_shards == 1:
             return _probe_seen(self.shards[0], keys)
         if self.routing == "stream":
@@ -325,15 +479,33 @@ class ShardedCluster:
 
     # -- Engine protocol ----------------------------------------------------------
     def write_batch(self, streams, lbas, fps) -> np.ndarray:
-        """Scatter aligned write columns across shards; gather inline flags."""
+        """Scatter aligned write columns across shards; gather inline flags.
+
+        With an executor attached, each shard's sub-batch runs on its worker
+        thread and the flags are gathered after the barrier — per-shard
+        record sequences are identical to the serial path, so the flags (and
+        all engine state) are bit-exact."""
         rb = ReplayBatch(np.asarray(streams), np.asarray(lbas), np.asarray(fps))
         sid = self._route_chunk(rb)
         out = np.zeros(len(rb), dtype=bool)
         parts, order = rb.scatter(sid, self.num_shards)
-        flags = []
-        for s, sub in enumerate(parts):
-            if sub is not None:
-                flags.append(self.shards[s].write_batch(sub.stream, sub.lba, sub.fp))
+        ex = self._executor
+        if ex is None or self.num_shards == 1:
+            flags = []
+            for s, sub in enumerate(parts):
+                if sub is not None:
+                    flags.append(self.shards[s].write_batch(sub.stream, sub.lba, sub.fp))
+        else:
+            results: List[Optional[np.ndarray]] = [None] * self.num_shards
+
+            def _run(s, sub):
+                results[s] = self.shards[s].write_batch(sub.stream, sub.lba, sub.fp)
+
+            for s, sub in enumerate(parts):
+                if sub is not None:
+                    ex.submit(s, lambda s=s, sub=sub: _run(s, sub))
+            ex.barrier()
+            flags = [results[s] for s, sub in enumerate(parts) if sub is not None]
         if flags:
             out[order] = np.concatenate(flags)
         return out
@@ -342,6 +514,7 @@ class ShardedCluster:
         """Scalar reference path: route per record, replay each shard's
         sub-trace through its engine's per-record oracle."""
         assert trace.dtype == TRACE_DTYPE
+        self._sync()
         sid = self._route_chunk(ReplayBatch.from_trace(trace))
         for s in range(self.num_shards):
             idx = np.nonzero(sid == s)[0]
@@ -350,46 +523,90 @@ class ShardedCluster:
         return self
 
     def ingest_batched(
-        self, trace: np.ndarray, batch_size: int = DEFAULT_BATCH_SIZE
+        self,
+        trace: np.ndarray,
+        batch_size: int = DEFAULT_BATCH_SIZE,
+        parallel: bool = False,
     ) -> "ShardedCluster":
         """Mid-stream columnar ingest: like ``replay_batched`` but WITHOUT
         the end-of-replay flush, so pending duplicate runs survive the call.
         This is the resumable entry point — ingest part of a trace, take a
         ``snapshot()``, and a restored cluster ingesting the remainder is
-        bit-exact with one uninterrupted replay (tests/test_snapshot_restore)."""
+        bit-exact with one uninterrupted replay (tests/test_snapshot_restore).
+
+        ``parallel=True`` (or an already-attached executor) runs each shard's
+        sub-batches on its worker thread, with the coordinator routing and
+        scattering chunk k+1 while the shards drain chunk k; the call returns
+        only after the barrier, so the cluster is quiescent on exit."""
+        own = parallel and self._executor is None and self.num_shards > 1
+        if own:
+            self.start_executor()
+        ex = self._executor
         rb = ReplayBatch.from_trace(trace)
-        for chunk in rb.batches(batch_size * self.num_shards):
-            sid = self._route_chunk(chunk)
-            parts, _ = chunk.scatter(sid, self.num_shards)
-            for s, sub in enumerate(parts):
-                if sub is not None:
-                    engine_run_batch(self.shards[s], sub)
+        try:
+            for chunk in rb.batches(batch_size * self.num_shards):
+                sid = self._route_chunk(chunk)
+                parts, _ = chunk.scatter(sid, self.num_shards)
+                for s, sub in enumerate(parts):
+                    if sub is not None:
+                        if ex is None:
+                            engine_run_batch(self.shards[s], sub)
+                        else:
+                            engine = self.shards[s]
+                            ex.submit(
+                                s, lambda engine=engine, sub=sub: engine_run_batch(engine, sub)
+                            )
+            if ex is not None:
+                ex.barrier()
+        finally:
+            if own:
+                self.stop_executor()
         return self
 
     def replay_batched(
-        self, trace: np.ndarray, batch_size: int = DEFAULT_BATCH_SIZE
+        self,
+        trace: np.ndarray,
+        batch_size: int = DEFAULT_BATCH_SIZE,
+        parallel: bool = False,
     ) -> "ShardedCluster":
         """Columnar batched replay: one vectorized route + scatter per chunk,
         then each shard's PR-1 batched driver over its sub-batch.  Chunks are
         ``batch_size * num_shards`` records so per-shard sub-batches stay
-        near the tuned batch size."""
-        self.ingest_batched(trace, batch_size)
-        for engine in self.shards:
-            engine_finish_replay(engine)
+        near the tuned batch size.  ``parallel=True`` runs the shards on
+        worker threads (pipelined coordinator, see ``ingest_batched``)."""
+        own = parallel and self._executor is None and self.num_shards > 1
+        if own:
+            self.start_executor()
+        try:
+            self.ingest_batched(trace, batch_size, parallel=parallel)
+            ex = self._executor
+            if ex is None:
+                for engine in self.shards:
+                    engine_finish_replay(engine)
+            else:
+                for s, engine in enumerate(self.shards):
+                    ex.submit(s, lambda engine=engine: engine_finish_replay(engine))
+                ex.barrier()
+        finally:
+            if own:
+                self.stop_executor()
         return self
 
     def replay_batched_timed(self, trace: np.ndarray, batch_size: int = DEFAULT_BATCH_SIZE):
-        """``replay_batched`` with a per-phase wall-time breakdown.
+        """Serial ``replay_batched`` with a per-phase wall-time breakdown.
 
         Returns ``{"route": s, "scatter": s, "shard_times": [s, ...]}``.
-        The shard-scaling benchmark uses it to separate coordinator work
-        (route + scatter, paid once) from per-shard ingest time — shards
-        run serially in this process but concurrently on a real cluster,
-        so per-shard throughput is ``len(trace) / sum(shard_times)`` and
-        the parallel-cluster model is ``route + scatter + max(shard_times)``.
+        This is the *diagnostic* view: it separates coordinator work
+        (route + scatter, paid once) from per-shard ingest time, with the
+        shards deliberately run serially so the per-phase attribution is
+        clean.  The *measured* parallel number comes from
+        ``replay_batched_parallel_timed`` — real worker threads, wall clock,
+        no modeling (the old ``route + scatter + max(shard_times)`` model is
+        kept only as a derived diagnostic in the scaling benchmark).
         """
         import time
 
+        self._sync()
         t_route = t_scatter = 0.0
         shard_times = [0.0] * self.num_shards
         rb = ReplayBatch.from_trace(trace)
@@ -411,6 +628,26 @@ class ShardedCluster:
             engine_finish_replay(engine)
             shard_times[s] += time.perf_counter() - t3
         return {"route": t_route, "scatter": t_scatter, "shard_times": shard_times}
+
+    def replay_batched_parallel_timed(
+        self, trace: np.ndarray, batch_size: int = DEFAULT_BATCH_SIZE
+    ) -> dict:
+        """Measured (not modeled) parallel replay: wall-clock seconds for the
+        full pipelined run — coordinator routing/scatter overlapped with the
+        shard workers, ending at the barrier after the per-shard flush.
+
+        Returns ``{"wall": s, "started_executor": bool}``.  Uses the attached
+        executor when one is running (thread-start cost excluded); otherwise
+        spins one up for the call and includes its start/stop in the wall
+        time, which is the honest end-to-end number for a cold run."""
+        import time
+
+        t0 = time.perf_counter()
+        self.replay_batched(trace, batch_size=batch_size, parallel=True)
+        return {
+            "wall": time.perf_counter() - t0,
+            "started_executor": self._executor is None,
+        }
 
     def _invalidate_stale_keys(self) -> int:
         """Cross-shard overwrite invalidation (router-driven unref).
@@ -444,6 +681,7 @@ class ShardedCluster:
         """Finish every shard (flush + shard-local exact phase) and aggregate.
         Shards retired by ``resize`` shrinks contribute their accrued
         counters through ``_retired_reports``."""
+        self._sync()  # barrier-and-merge: no in-flight shard work past here
         for engine in self.shards:
             engine_finish_replay(engine)  # flush pending runs: mappings final
         self._invalidate_stale_keys()
@@ -458,6 +696,7 @@ class ShardedCluster:
         locally (optionally budgeted), no cross-shard coordination beyond
         the router's stale-key invalidations.  Returns the number of disk
         blocks reclaimed across the cluster."""
+        self._sync()
         before = self.reclaimed_blocks
         for engine in self.shards:
             engine_finish_replay(engine)
@@ -479,6 +718,7 @@ class ShardedCluster:
     # -- invariants ----------------------------------------------------------------
     def check_consistency(self) -> None:
         """Per-shard store invariants + fingerprint-partition disjointness."""
+        self._sync()
         for s, engine in enumerate(self.shards):
             engine.store.check_consistency()
             if self.routing == "fingerprint":
@@ -535,6 +775,12 @@ class ShardedCluster:
         if engine_factory is not None:
             self._engine_factory = engine_factory
             self._engine_kwargs = None
+        # quiesce the workers, then drop the executor: its worker count is
+        # tied to the (old) shard count.  Restarted after the migration so a
+        # live serving front end keeps its parallel path across a resize.
+        had_executor = self._executor is not None
+        if had_executor:
+            self.stop_executor()
         # validate every shard BEFORE any state moves: a failure mid-migration
         # would leave the cluster half-migrated under the old ring
         for s, engine in enumerate(self.shards):
@@ -556,6 +802,8 @@ class ShardedCluster:
             "reconciled_shards": [],
         }
         if new_num_shards == old_num:
+            if had_executor:
+                self.start_executor()
             return stats
 
         # 1. quiesce: every mapping final before anything moves
@@ -644,6 +892,8 @@ class ShardedCluster:
                 if hasattr(engine, "run_postprocess"):
                     engine.run_postprocess()
                     stats["reconciled_shards"].append(t)
+        if had_executor:
+            self.start_executor()  # fresh workers sized to the new ring
         return stats
 
     # -- snapshot/restore ----------------------------------------------------------
@@ -654,6 +904,7 @@ class ShardedCluster:
         seed) and is rebuilt on restore."""
         from .snapshot import report_to_tree, snapshot_engine
 
+        self._sync()  # snapshots are barrier states: no in-flight sub-batches
         return {
             "config": {
                 "num_shards": self.num_shards,
@@ -676,6 +927,7 @@ class ShardedCluster:
         ``ShardedCluster.restore`` for a from-scratch rebuild."""
         from .snapshot import check_engine_compatible, report_from_tree
 
+        self._sync()
         config = tree["config"]
         if config["num_shards"] != self.num_shards:
             raise ValueError(
@@ -744,6 +996,7 @@ class ShardedCluster:
         cluster._directory = from_pairs(tree["directory"], value=int)
         cluster._retired_reports = [report_from_tree(r) for r in tree["retired"]]
         cluster.shard_reports = None
+        cluster._executor = None  # executors are process-local, never restored
         return cluster
 
 

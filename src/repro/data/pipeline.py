@@ -123,6 +123,7 @@ class DedupIngestPipeline:
         postprocess_every_blocks: int = 4096,
         token_skew: float = 1.2,
         num_shards: int = 1,
+        parallel_shards: bool = False,
         snapshot_every_blocks: int = 0,
         seed: int = 0,
     ):
@@ -158,6 +159,11 @@ class DedupIngestPipeline:
                 postprocess_period=postprocess_every_blocks,
                 seed=seed,
             )
+            if parallel_shards:
+                # shard worker threads: each write_batch scatters to the
+                # shards concurrently (barrier-and-merge keeps the flags
+                # and all snapshots bit-exact with the serial path)
+                self.engine.start_executor()
         else:
             self.engine = HPDedup(
                 cache_entries=cache_entries,

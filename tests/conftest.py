@@ -1,9 +1,33 @@
 import os
 import sys
 
+import pytest
+
 # Tests must see exactly ONE device (the dry-run alone fakes 512); keep jax
 # imports lazy to the first test so no global XLA_FLAGS leak here.
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+def require_hypothesis():
+    """Guard for property-test files: skip locally, hard-fail in CI.
+
+    ``pytest.importorskip("hypothesis")`` alone lets a broken CI install
+    silently drop every property suite — the run stays green while the
+    differential property coverage quietly vanishes.  CI sets
+    ``REQUIRE_HYPOTHESIS=1`` (hypothesis is pinned in requirements-dev.txt),
+    turning a missing import into a loud failure; local runs without the
+    dev extras still skip.
+    """
+    try:
+        import hypothesis  # noqa: F401
+    except ImportError:
+        if os.environ.get("REQUIRE_HYPOTHESIS"):
+            raise RuntimeError(
+                "hypothesis is required (REQUIRE_HYPOTHESIS=1) but not "
+                "installed — the property suites would silently skip"
+            )
+        pytest.skip("hypothesis not installed", allow_module_level=True)
+    return hypothesis
 
 # Centralized hypothesis profiles (test hygiene, ISSUE 4): property tests use
 # bare @given and inherit the profile instead of scattering per-file

@@ -17,7 +17,9 @@ fingerprint-partitioning contract against a single-engine scalar oracle:
 import numpy as np
 import pytest
 
-pytest.importorskip("hypothesis")
+from conftest import require_hypothesis
+
+require_hypothesis()
 from hypothesis import given, strategies as st
 
 from repro.core import HPDedup, ShardedCluster

@@ -12,7 +12,9 @@ import pytest
 
 from repro.core.fp_index import EMPTY_KEY, TOMB_KEY, FingerprintIndex
 
-pytest.importorskip("hypothesis")
+from conftest import require_hypothesis
+
+require_hypothesis()
 from hypothesis import given  # noqa: E402
 from hypothesis import strategies as st  # noqa: E402
 

@@ -3,7 +3,9 @@
 import numpy as np
 import pytest
 
-pytest.importorskip("hypothesis")
+from conftest import require_hypothesis
+
+require_hypothesis()
 from hypothesis import given, strategies as st
 
 from repro.core.ffh import distinct_of_ffh, ffh_from_counts, occurrence_counts, sample_size_of_ffh

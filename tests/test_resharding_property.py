@@ -18,7 +18,9 @@ mid-replay cut points must uphold:
 import numpy as np
 import pytest
 
-pytest.importorskip("hypothesis")
+from conftest import require_hypothesis
+
+require_hypothesis()
 from hypothesis import given, strategies as st
 
 from repro.core import ConsistentHashRing, HPDedup, ShardedCluster

@@ -2,7 +2,9 @@
 
 import pytest
 
-pytest.importorskip("hypothesis")
+from conftest import require_hypothesis
+
+require_hypothesis()
 from hypothesis import given, strategies as st
 
 from repro.core.store import BlockStore
