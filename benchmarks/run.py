@@ -35,6 +35,7 @@ SUITE = [
     ("replay", "benchmarks/replay_throughput.py", "BENCH_replay.json"),
     ("cluster", "benchmarks/cluster_scaling.py", "BENCH_cluster.json"),
     ("resharding", "benchmarks/resharding.py", "BENCH_resharding.json"),
+    ("gc", "benchmarks/gc_reclaim.py", "BENCH_gc.json"),
     ("serving", "benchmarks/serving_latency.py", "BENCH_serving.json"),
 ]
 

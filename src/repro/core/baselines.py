@@ -165,6 +165,13 @@ class DIODE:
         self.thresholds.record_dup_run(-1, len(self._run))
         if len(self._run) >= t:
             for stream, lba, fp, pba in self._run:
+                # TOCTOU guard (same as HPDedup's run decision): the cached
+                # pair may point at a PBA freed — or freed and recycled —
+                # since the cache hit; deduping against it would map this
+                # LBA onto dead or foreign content
+                if self.store.fp_of_pba.get(pba) != fp:
+                    self._write_through(stream, lba, fp)
+                    continue
                 self.store.map_duplicate(stream, lba, pba)
                 self.metrics.inline_dups += 1
         else:

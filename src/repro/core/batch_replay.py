@@ -693,6 +693,11 @@ def _flush_run_staged(d) -> None:
     store = d.store
     if len(d._run) >= t:
         for stream, lba, fp, pba in d._run:
+            # same TOCTOU guard as the scalar path: never dedup against a
+            # PBA freed (or freed and recycled) since the cache hit
+            if store.fp_of_pba.get(pba) != fp:
+                d.cache.admit(stream, fp, store.stage_new_block(stream, lba, fp))
+                continue
             store.stage_duplicate(stream, lba, pba)
             d.metrics.inline_dups += 1
     else:

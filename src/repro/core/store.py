@@ -15,6 +15,7 @@ requirement figure, Fig. 7), writes issued to disk.
 
 from __future__ import annotations
 
+import threading
 from collections import OrderedDict
 from typing import Callable, Dict, List, Optional, Tuple
 
@@ -105,6 +106,76 @@ class BlockStore:
         # cleanup windows.
         self.freed_blocks = 0
         self.on_free: Optional[Callable[[int], None]] = None
+        # -- online GC (epoch/grace-period protocol) ---------------------------
+        # A free splits into a *logical* part (unlink the fingerprint, LBA
+        # reverse entries, refcount row — immediate, so a re-written
+        # fingerprint can never dedup against the dead block) and a
+        # *physical* part (freed_blocks / on_free / the hole joining
+        # _free_pbas).  With ``deferred_reclaim`` on, the physical part of a
+        # free that lands while any epoch is pinned parks in ``_limbo`` until
+        # every pin at or below its epoch tag drains (``collect_limbo``) —
+        # in-flight work that may still hold a reference to the PBA finishes
+        # before the slot is recycled.  Pins are process-local (writes in
+        # flight); epoch/limbo/holes are durable state and are serialized.
+        self.deferred_reclaim = False
+        self.gc_epoch = 0
+        self._epoch_lock = threading.Lock()
+        self._epoch_pins: Dict[int, int] = {}  # epoch -> outstanding pin count
+        self._limbo: List[Tuple[int, int]] = []  # (epoch tag, pba)
+        # physically reclaimed PBA slots (range holes).  ``compact`` closes
+        # them by relocating live blocks downward; only compaction ever
+        # recycles a slot — fresh writes always allocate monotonically.
+        self._free_pbas: List[int] = []
+        self.relocated_blocks = 0
+        # fires after a live block moved old -> new (the serving layer
+        # relocates the matching KV page); state is already updated.
+        self.on_relocate: Optional[Callable[[int, int], None]] = None
+
+    # -- epoch protocol ----------------------------------------------------------
+    def pin_epoch(self) -> int:
+        """Register in-flight work under the current epoch; returns the tag
+        to pass to ``unpin_epoch``.  While any pin at epoch <= t exists,
+        blocks freed at tag t are reclaimed logically but not physically."""
+        with self._epoch_lock:
+            e = self.gc_epoch
+            self._epoch_pins[e] = self._epoch_pins.get(e, 0) + 1
+            return e
+
+    def unpin_epoch(self, epoch: int) -> None:
+        with self._epoch_lock:
+            n = self._epoch_pins.get(epoch, 0) - 1
+            if n > 0:
+                self._epoch_pins[epoch] = n
+            else:
+                self._epoch_pins.pop(epoch, None)
+
+    def advance_epoch(self) -> int:
+        """Open a new grace period: frees from here on carry the new tag, so
+        they outlive every pin taken before the advance."""
+        with self._epoch_lock:
+            self.gc_epoch += 1
+            return self.gc_epoch
+
+    def collect_limbo(self, force: bool = False) -> int:
+        """Physically reclaim parked frees whose grace period drained.
+
+        An entry tagged t is ready when no pin at epoch <= t remains (it can
+        no longer be referenced by in-flight work).  ``force=True`` ignores
+        pins — only valid at a full barrier (finish / resize quiesce), where
+        nothing is in flight by construction.  Returns the reclaim count."""
+        if not self._limbo:
+            return 0
+        with self._epoch_lock:
+            horizon = None if force else min(self._epoch_pins, default=None)
+            if horizon is None:
+                ready, self._limbo = self._limbo, []
+            else:
+                ready = [ent for ent in self._limbo if ent[0] < horizon]
+                if ready:
+                    self._limbo = [ent for ent in self._limbo if ent[0] >= horizon]
+        for _, pba in ready:
+            self._reclaim(pba)
+        return len(ready)
 
     # -- write path ------------------------------------------------------------
     def write_new_block(self, stream: int, lba: int, fp: int) -> int:
@@ -196,8 +267,6 @@ class BlockStore:
             rc = self.refcount
             rc_get = rc.get
             for pba in sd:
-                # .get: a baseline without the TOCTOU guard (DIODE) may remap
-                # to a PBA freed in an earlier batch, like scalar _map does
                 rc[pba] = rc_get(pba, 0) + 1
         self._reverse_dirty = True
         sw.clear()
@@ -262,10 +331,11 @@ class BlockStore:
             self._free(pba)
 
     def _free(self, pba: int) -> None:
+        """Logical free: unlink the block from every lookup structure NOW —
+        in particular the fingerprint table/index, so a later write of the
+        same content can never dedup against the dead block — then reclaim
+        the slot physically, or park it in limbo while epochs are pinned."""
         self._ever_freed = True
-        self.freed_blocks += 1
-        if self.on_free is not None:
-            self.on_free(pba)
         fp = self.fp_of_pba.pop(pba, None)
         if fp is not None:
             lst = self.fp_table.get(fp)
@@ -283,6 +353,21 @@ class BlockStore:
         self.lbas_of_pba.pop(pba, None)
         self.buffer.invalidate(pba)
         self.live_blocks -= 1
+        if self.deferred_reclaim:
+            with self._epoch_lock:
+                if self._epoch_pins:
+                    self._limbo.append((self.gc_epoch, pba))
+                    return
+        self._reclaim(pba)
+
+    def _reclaim(self, pba: int) -> None:
+        """Physical reclaim: the observable free (counter, then hook, so the
+        hook sees the updated count) and the slot becoming a compactable
+        hole."""
+        self.freed_blocks += 1
+        if self.on_free is not None:
+            self.on_free(pba)
+        self._free_pbas.append(pba)
 
     # -- read path ---------------------------------------------------------------
     def read(self, stream: int, lba: int) -> Optional[int]:
@@ -335,6 +420,72 @@ class BlockStore:
                 reclaimed += 1
         return reclaimed
 
+    # -- online GC: compaction -------------------------------------------------------
+    def compact(self, max_moves: Optional[int] = None) -> Dict[int, int]:
+        """Close PBA range holes by relocating live blocks downward.
+
+        The highest live blocks move into the lowest reclaimed slots
+        (classic defragmentation, budgeted by ``max_moves`` so foreground
+        traffic can interleave), every lookup structure follows the move
+        (fingerprint-table row, PBA metadata, refcount, LBA mappings via the
+        reverse index), and trailing holes are returned to the allocator by
+        lowering ``_next_pba``.  Slots in limbo are *not* holes — their
+        grace period hasn't drained — so compaction never touches them.
+        Only compaction recycles PBA slots; fresh writes stay monotonic.
+
+        Returns ``{old_pba: new_pba}`` for every relocated block, so the
+        engine layer can patch decision state that carries PBAs (fingerprint
+        caches, pending duplicate runs) and keep inline decisions bit-exact
+        with a never-compacted run.
+        """
+        relocations: Dict[int, int] = {}
+        if not self._free_pbas:
+            return relocations
+        assert not self._staged_writes and not self._staged_dups, (
+            "compact() requires flushed staged writes"
+        )
+        self._ensure_reverse()
+        holes = sorted(self._free_pbas)
+        live_desc = sorted(self.fp_of_pba, reverse=True)
+        hi = 0
+        for old in live_desc:
+            if max_moves is not None and len(relocations) >= max_moves:
+                break
+            if hi >= len(holes):
+                break
+            new = holes[hi]
+            if new >= old:
+                break  # every remaining hole sits above every remaining block
+            hi += 1
+            self._relocate(old, new)
+            relocations[old] = new
+        # vacated slots become holes at the top of the range; trailing holes
+        # (and only those — a limbo slot below them blocks the trim) shrink
+        # the allocated span so fresh writes reuse the space
+        hole_set = set(holes[hi:])
+        hole_set.update(relocations)
+        while self._next_pba - 1 in hole_set:
+            self._next_pba -= 1
+            hole_set.remove(self._next_pba)
+        self._free_pbas = sorted(hole_set)
+        return relocations
+
+    def _relocate(self, old: int, new: int) -> None:
+        """Move one live block's identity from slot ``old`` to ``new``."""
+        fp = self.fp_of_pba.pop(old)
+        self.fp_of_pba[new] = fp
+        lst = self.fp_table[fp]
+        lst[lst.index(old)] = new  # in place: canonical order is positional
+        self.refcount[new] = self.refcount.pop(old)
+        keys = self.lbas_of_pba.pop(old, set())
+        for key in keys:
+            self.lba_map[key] = new
+        self.lbas_of_pba[new] = keys
+        self.buffer.invalidate(old)
+        self.relocated_blocks += 1
+        if self.on_relocate is not None:
+            self.on_relocate(old, new)
+
     # -- shard migration support ---------------------------------------------------
     def extract_fp(self, fp: int) -> Optional[List[int]]:
         """Pop ``fp``'s whole fingerprint-table row (resharding moves it to
@@ -379,6 +530,18 @@ class BlockStore:
             "ever_freed": self._ever_freed,
             "lba_watermark": pairs(self._lba_watermark),
             "buffer": self.buffer.snapshot(),
+            # online-GC state: limbo entries keep their epoch tag so a restore
+            # mid-grace-period resumes the exact same drain schedule.  Epoch
+            # *pins* are process-local (a pin is a live in-flight write) and
+            # are never serialized — a snapshot is taken at a batch boundary
+            # where no write is in flight.
+            "gc": {
+                "epoch": self.gc_epoch,
+                "limbo": [[e, p] for e, p in self._limbo],
+                "free_pbas": list(self._free_pbas),
+                "deferred": self.deferred_reclaim,
+                "relocated": self.relocated_blocks,
+            },
         }
 
     def load_snapshot(self, tree: dict) -> None:
@@ -401,6 +564,13 @@ class BlockStore:
         self._staged_dups = []
         self.lbas_of_pba = {}
         self._reverse_dirty = True  # rebuilt lazily from lba_map
+        gc = tree.get("gc") or {}
+        self.gc_epoch = int(gc.get("epoch", 0))
+        self._limbo = [(int(e), int(p)) for e, p in gc.get("limbo", [])]
+        self._free_pbas = [int(p) for p in gc.get("free_pbas", [])]
+        self.deferred_reclaim = bool(gc.get("deferred", False))
+        self.relocated_blocks = int(gc.get("relocated", 0))
+        self._epoch_pins = {}
 
     # -- invariants (used by property tests) --------------------------------------
     def lookup_fp(self, fp: int) -> Optional[int]:
@@ -436,3 +606,14 @@ class BlockStore:
                 self.refcount.get(p),
                 refs.get(p),
             )
+        # GC bookkeeping: holes and limbo slots are dead, unique, and
+        # disjoint.  (No span bound: a hole left by freeing a block migrated
+        # in from another shard carries that shard's PBA namespace, which
+        # can sit numerically above the local allocator.)
+        holes = list(self._free_pbas)
+        limbo = [p for _, p in self._limbo]
+        assert len(set(holes)) == len(holes), "duplicate hole PBAs"
+        assert len(set(limbo)) == len(limbo), "duplicate limbo PBAs"
+        assert not set(holes) & set(limbo), "PBA both hole and limbo"
+        for p in holes + limbo:
+            assert p not in live, f"live PBA {p} marked reclaimed"

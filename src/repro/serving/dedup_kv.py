@@ -21,7 +21,7 @@ smoke configs; the Pallas paged-attention kernel covers the TPU hot path.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, List, Tuple
+from typing import Any, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -147,11 +147,25 @@ class DedupKVServer:
         self.metrics = ServeMetrics()
         self._decode = jax.jit(model.decode_step)
         self._request_counter = 0
-        # reclaim hook: the store(s) tell us which PBAs the GC freed so the
-        # matching KV pages drop without scanning refcounts cluster-wide
-        self._freed_pbas: List[int] = []
+        self._attach_reclaim_hooks()
+
+    def _attach_reclaim_hooks(self) -> None:
+        """Wire the stores' reclaim hooks to the HBM page table: a freed PBA
+        drops its KV page the moment the store reclaims it (no deferred
+        drain list), and online-GC compaction moving a live block carries
+        its page to the new PBA."""
         for engine in self._engines():
-            engine.store.on_free = self._freed_pbas.append
+            engine.store.on_free = self._on_page_free
+            engine.store.on_relocate = self._on_page_relocate
+
+    def _on_page_free(self, pba: int) -> None:
+        if self.pages.pop(pba, None) is not None:
+            self.metrics.post_pages_merged += 1
+
+    def _on_page_relocate(self, old: int, new: int) -> None:
+        page = self.pages.pop(old, None)
+        if page is not None:
+            self.pages[new] = page
 
     def _engines(self) -> List[HPDedup]:
         return self.dedup.shards if isinstance(self.dedup, ShardedCluster) else [self.dedup]
@@ -265,9 +279,7 @@ class DedupKVServer:
         load_engine_state(self.dedup, tree["engine"])
         self._request_counter = int(tree["request_counter"])
         self.metrics = ServeMetrics(**tree["metrics"])
-        self._freed_pbas.clear()
-        for engine in self._engines():
-            engine.store.on_free = self._freed_pbas.append
+        self._attach_reclaim_hooks()
         if tree["pages"] is None:
             self.pages = {}
         else:
@@ -279,16 +291,19 @@ class DedupKVServer:
         """Background exact pass: merge duplicate pages the cache missed.
 
         Runs shard-locally on a cluster (each shard's fingerprint partition
-        is swept independently); the stores' ``on_free`` reclaim hook names
-        the PBAs the GC released, so the matching KV pages drop without a
-        cluster-wide refcount scan.
+        is swept independently); the stores' ``on_free`` reclaim hook drops
+        each merged-away page the moment its PBA is released, so no
+        cluster-wide refcount scan (or drain list) is needed.
         """
         before = sum(len(e.store.duplicate_fingerprints()) for e in self._engines())
         for engine in self._engines():
             engine.post.run()  # LBA tables are remapped by the store
-        for pba in self._freed_pbas:
-            if pba in self.pages:
-                del self.pages[pba]
-                self.metrics.post_pages_merged += 1
-        self._freed_pbas.clear()
         return before
+
+    def run_gc(self, max_moves: Optional[int] = None) -> Dict[str, int]:
+        """One online-GC step (epoch drain + PBA compaction) on the backing
+        engine or cluster; freed pages drop and relocated pages follow their
+        blocks via the reclaim hooks."""
+        if isinstance(self.dedup, ShardedCluster):
+            return self.dedup.run_gc(max_moves_per_shard=max_moves)
+        return self.dedup.run_gc(max_moves=max_moves)

@@ -313,6 +313,23 @@ class AsyncDedupFrontend:
             self._engine_pool, lambda: self.engine.resize(new_num_shards, **kw)
         )
 
+    async def run_gc(self, max_moves_per_shard: Optional[int] = None) -> Optional[dict]:
+        """One online-GC step behind live traffic.
+
+        Queued on the engine thread *behind* the batches already closed —
+        exactly like ``resize`` — but without flushing the open buffer or
+        quiescing anything: writes keep buffering, and batches closed after
+        this call land behind the GC step.  Requires an engine exposing
+        ``run_gc`` (``ShardedCluster`` or a bare ``HPDedup``)."""
+        if not hasattr(self.engine, "run_gc"):
+            raise TypeError(f"{type(self.engine).__name__} does not support run_gc")
+        loop = asyncio.get_running_loop()
+        if hasattr(self.engine, "shards"):  # cluster API
+            fn = lambda: self.engine.run_gc(max_moves_per_shard=max_moves_per_shard)
+        else:
+            fn = lambda: self.engine.run_gc(max_moves=max_moves_per_shard)
+        return await loop.run_in_executor(self._engine_pool, fn)
+
     async def close(self) -> None:
         """Drain, stop the engine thread (and the cluster executor we own)."""
         if self._closed:

@@ -1,0 +1,172 @@
+"""Reclaim-path regression + edge-case coverage (BlockStore free machinery).
+
+Two groups:
+
+* The stale-fingerprint dedup hazard: a fingerprint whose PBA was freed must
+  never satisfy a later inline dedup of the same content — mapping an LBA to
+  a reclaimed PBA corrupts every key pointing there (FASTEN's blast-radius
+  argument).  HPDedup's run decision carries a TOCTOU guard; DIODE's run
+  flush historically did not, on either the scalar or the staged path.
+* Reclaim-hook edge cases: double ``unmap`` of the same key, ``unmap`` of a
+  never-mapped key, and the ``on_free`` firing contract (after the
+  ``freed_blocks`` increment, exactly once per freed PBA) — under both
+  serial and parallel replay.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+from repro.core import DIODE, BlockStore, ReplayBatch, ShardedCluster, generate_workload
+from repro.core.batch_replay import engine_finish_replay, engine_run_batch
+
+N_RUN = 20  # > INITIAL_THRESHOLD (16): the dup run passes DIODE's global bar
+FPS = [0xA000 + i for i in range(N_RUN)]
+
+
+def _write_all(d, lba0: int, fps) -> None:
+    for i, fp in enumerate(fps):
+        d.on_write(0, lba0 + i, fp)
+
+
+def _free_originals(d) -> None:
+    """Overwrite every LBA referencing the original content with unique new
+    content, driving the original PBAs' refcounts to zero (freed)."""
+    _write_all(d, 0, [0xB000 + i for i in range(N_RUN)])
+    _write_all(d, 100, [0xC000 + i for i in range(N_RUN)])
+
+
+def test_diode_rewrite_after_free_does_not_dedup_against_freed_block():
+    """write -> overwrite-to-free -> rewrite same content: the rewrite must
+    allocate fresh blocks, not remap LBAs onto reclaimed PBAs."""
+    d = DIODE(cache_entries=256)
+    _write_all(d, 0, FPS)        # fresh blocks; fingerprints admitted to cache
+    _write_all(d, 100, FPS)      # dup run >= threshold -> inline dedup
+    d._flush_run()
+    freed0 = d.store.freed_blocks
+    _free_originals(d)           # original PBAs hit refcount 0 -> reclaimed
+    assert d.store.freed_blocks - freed0 >= N_RUN
+    _write_all(d, 200, FPS)      # rewrite: cache still holds stale fp->pba pairs
+    d._flush_run()
+    # the scalar oracle: every rewritten key reads back live content with the
+    # right fingerprint at refcount 1, and the store stays self-consistent
+    d.store.check_consistency()
+    for i, fp in enumerate(FPS):
+        pba = d.store.read(0, 200 + i)
+        assert pba is not None
+        assert d.store.fp_of_pba.get(pba) == fp, "LBA remapped to a freed PBA"
+        assert d.store.refcount[pba] == 1
+
+
+def test_diode_rewrite_after_free_staged_path_matches_scalar():
+    """The same hazard through the batched (staged-store) driver: the staged
+    run flush must apply the identical stale-PBA guard as the scalar path."""
+    recs = []
+    for lba0, fps in (
+        (0, FPS),
+        (100, FPS),
+        (0, [0xB000 + i for i in range(N_RUN)]),
+        (100, [0xC000 + i for i in range(N_RUN)]),
+        (200, FPS),
+    ):
+        recs += [(0, lba0 + i, fp) for i, fp in enumerate(fps)]
+    streams = np.array([r[0] for r in recs], dtype=np.int64)
+    lbas = np.array([r[1] for r in recs], dtype=np.int64)
+    fps_col = np.array([r[2] for r in recs], dtype=np.uint64)
+
+    scalar = DIODE(cache_entries=256)
+    for s, lba, fp in recs:
+        scalar.on_write(s, lba, int(fp))
+    scalar._flush_run()
+
+    batched = DIODE(cache_entries=256)
+    for lo in range(0, len(recs), 16):
+        engine_run_batch(
+            batched, ReplayBatch(streams[lo : lo + 16], lbas[lo : lo + 16], fps_col[lo : lo + 16])
+        )
+    engine_finish_replay(batched)
+
+    batched.store.check_consistency()
+    scalar.store.check_consistency()
+    assert batched.store.lba_map == scalar.store.lba_map
+    assert batched.store.refcount == scalar.store.refcount
+    for i, fp in enumerate(FPS):
+        pba = batched.store.read(0, 200 + i)
+        assert pba is not None and batched.store.fp_of_pba.get(pba) == fp
+
+
+# ---------------------------------------------------------------------------
+# Reclaim-hook edge cases.
+# ---------------------------------------------------------------------------
+
+
+def test_unmap_double_and_never_mapped():
+    store = BlockStore()
+    store.write_new_block(0, 1, 0xF1)
+    pba = store.unmap(0, 1)
+    assert pba is not None
+    assert store.freed_blocks == 1
+    # double unmap of the same key: no-op, no spurious free
+    assert store.unmap(0, 1) is None
+    # unmap of a never-mapped key: no-op
+    assert store.unmap(7, 99) is None
+    assert store.freed_blocks == 1
+    store.check_consistency()
+
+
+def test_on_free_fires_once_per_pba_after_counter_increment():
+    store = BlockStore()
+    events = []  # (pba, freed_blocks-at-call)
+    store.on_free = lambda pba: events.append((pba, store.freed_blocks))
+    p1 = store.write_new_block(0, 1, 0xF1)
+    p2 = store.write_new_block(0, 2, 0xF2)
+    store.unmap(0, 1)
+    store.unmap(0, 2)
+    assert [p for p, _ in events] == [p1, p2]
+    # contract: the counter is incremented BEFORE the hook observes the free
+    assert [c for _, c in events] == [1, 2]
+    assert store.freed_blocks == 2
+
+
+def _overwrite_trace(total=3_000, seed=13):
+    base = generate_workload("A", total_requests=total, seed=seed)[0]
+    over = base.copy()
+    over["ts"] = over["ts"] + int(base["ts"].max()) + 1
+    over["fp"] = over["fp"] ^ np.uint64(0x9E3779B97F4A7C15)
+    both = np.concatenate([base, over])
+    both.sort(order="ts", kind="stable")
+    return both
+
+
+@pytest.mark.parametrize("parallel", [False, True], ids=["serial", "parallel"])
+def test_on_free_order_matches_freed_blocks_under_replay(parallel):
+    """Per-shard ``on_free`` event sequences and ``freed_blocks`` totals are
+    identical between serial and parallel replay (worker FIFO determinism
+    extends to the reclaim hooks)."""
+    trace = _overwrite_trace()
+    cluster = ShardedCluster(num_shards=4, cache_entries=512)
+    events = [[] for _ in range(4)]
+    for s, engine in enumerate(cluster.shards):
+        store = engine.store
+        engine.store.on_free = lambda pba, s=s, store=store: events[s].append(
+            (pba, store.freed_blocks)
+        )
+    cluster.replay_batched(trace, batch_size=256, parallel=parallel)
+    cluster.finish()
+    for s, engine in enumerate(cluster.shards):
+        assert len(events[s]) == engine.store.freed_blocks
+        # every event observed the just-incremented counter, in order
+        assert [c for _, c in events[s]] == list(range(1, len(events[s]) + 1))
+        assert len({p for p, _ in events[s]}) == len(events[s]), "PBA freed twice"
+    # the same replay, other mode, produces the same per-shard event streams
+    other = ShardedCluster(num_shards=4, cache_entries=512)
+    other_events = [[] for _ in range(4)]
+    for s, engine in enumerate(other.shards):
+        store = engine.store
+        engine.store.on_free = lambda pba, s=s, store=store: other_events[s].append(
+            (pba, store.freed_blocks)
+        )
+    other.replay_batched(trace, batch_size=256, parallel=not parallel)
+    other.finish()
+    assert events == other_events
