@@ -37,6 +37,7 @@ SUITE = [
     ("resharding", "benchmarks/resharding.py", "BENCH_resharding.json"),
     ("gc", "benchmarks/gc_reclaim.py", "BENCH_gc.json"),
     ("serving", "benchmarks/serving_latency.py", "BENCH_serving.json"),
+    ("replication", "benchmarks/replication.py", "BENCH_replication.json"),
 ]
 
 

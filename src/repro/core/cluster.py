@@ -68,8 +68,10 @@ allocate from that range again.
 
 from __future__ import annotations
 
+import functools
 import queue
 import threading
+import warnings
 from typing import Callable, Dict, List, Optional, Sequence
 
 import numpy as np
@@ -124,17 +126,56 @@ class ConsistentHashRing:
         order = np.argsort(points, kind="stable")
         self.points = points[order]
         self.owners = owners[order]
+        self.num_shards = num_shards
+        # per-r successor tables, built lazily: row i = the first r *distinct
+        # physical* owners met walking clockwise from ring position i
+        self._succ: Dict[int, np.ndarray] = {}
 
-    def shard_of_many(self, keys: np.ndarray) -> np.ndarray:
-        """Vectorized ring lookup: one hash + one searchsorted per batch."""
+    def _ring_idx(self, keys: np.ndarray) -> np.ndarray:
         h = _splitmix64(np.asarray(keys, dtype=np.uint64))
         idx = np.searchsorted(self.points, h, side="left")
         # past the last point: wrap to the ring's first point
         idx[idx == self.points.size] = 0
-        return self.owners[idx]
+        return idx
+
+    def shard_of_many(self, keys: np.ndarray) -> np.ndarray:
+        """Vectorized ring lookup: one hash + one searchsorted per batch."""
+        return self.owners[self._ring_idx(keys)]
 
     def shard_of(self, key: int) -> int:
         return int(self.shard_of_many(np.asarray([key], dtype=np.uint64))[0])
+
+    def _successor_table(self, r: int) -> np.ndarray:
+        """(num_points, r) table: first ``r`` distinct physical shards from
+        each ring position.  Successive vnodes of one shard are skipped — a
+        replica set never places two copies on the same physical shard."""
+        table = self._succ.get(r)
+        if table is None:
+            n = self.owners.size
+            doubled = np.concatenate([self.owners, self.owners])
+            table = np.empty((n, r), dtype=np.int64)
+            for i in range(n):
+                got = 0
+                for owner in doubled[i : i + n]:
+                    if owner not in table[i, :got]:
+                        table[i, got] = owner
+                        got += 1
+                        if got == r:
+                            break
+            self._succ[r] = table
+        return table
+
+    def owners_of_many(self, keys: np.ndarray, r: int) -> np.ndarray:
+        """Replica placement: for each key, the ``r`` distinct physical
+        shards owning its copies, primary first.  Column 0 is identical to
+        ``shard_of_many`` — replication never re-homes the primary, so all
+        engine decisions are unchanged by R.  Requires r <= num_shards."""
+        if not 1 <= r <= self.num_shards:
+            raise ValueError(f"r must be in [1, {self.num_shards}], got {r}")
+        idx = self._ring_idx(keys)
+        if r == 1:
+            return self.owners[idx][:, None]
+        return self._successor_table(r)[idx]
 
 
 _SHUTDOWN = object()
@@ -210,12 +251,27 @@ class ParallelShardExecutor:
                     "— discard the cluster and restore from the last snapshot"
                 ) from e
 
+    def failed_shards(self) -> Dict[int, BaseException]:
+        """Shard index -> the first exception its worker raised (empty when
+        healthy).  The teardown path uses this to mark exactly the faulted
+        shards poisoned instead of re-raising mid-shutdown."""
+        return {s: e for s, e in enumerate(self._errors) if e is not None}
+
     def submit(self, shard: int, fn: Callable[[], object]) -> None:
         """Enqueue ``fn`` on shard ``shard``'s worker (FIFO per shard).
-        Blocks when the shard's queue is full (backpressure)."""
+        Blocks when the shard's queue is full (backpressure).  A fault is
+        lane-local: submitting to the faulted lane raises, submitting to a
+        healthy lane proceeds (the fault still surfaces at the next
+        barrier) — so one poisoned shard cannot abort a scatter half-way
+        and strand routed-but-unexecuted work on the healthy lanes."""
         if self._closed:
             raise RuntimeError("executor is closed")
-        self._check_errors()
+        e = self._errors[shard]
+        if e is not None:
+            raise ShardWorkerError(
+                f"shard {shard} worker failed: {e!r}; shard state is undefined "
+                "— discard the cluster and restore from the last snapshot"
+            ) from e
         self._queues[shard].put(fn)
 
     def barrier(self) -> None:
@@ -292,6 +348,97 @@ def aggregate_reports(reports: Sequence[HybridReport]) -> HybridReport:
     )
 
 
+def _locked(fn):
+    """Coordinator mutual exclusion: every public entry point that submits
+    worker work or reads shard state runs under the cluster's reentrant
+    lock, so a snapshot from one thread can never interleave with another
+    thread's submission loop and serialize an engine a worker is mutating
+    (the run_gc(wait=False)-vs-snapshot race).  Workers never take this
+    lock, so holding it across a barrier cannot deadlock."""
+
+    @functools.wraps(fn)
+    def wrapper(self, *args, **kwargs):
+        with self._lock:
+            return fn(self, *args, **kwargs)
+
+    return wrapper
+
+
+class _ReplicaStore:
+    """One physical shard's replica-side state (coordinator-owned).
+
+    Replicas are content-addressed mirrors, not engines: a shard holds at
+    most one copy of each fingerprint replicated onto it, refcounted by the
+    number of live (stream, lba) keys referencing that content.  Alongside
+    the copies it keeps, per *primary* shard, the ordered oplog of every
+    record routed to that primary since the last cluster checkpoint — the
+    roll-forward log ``recover_shard`` replays into a rebuilt engine.
+
+    Only the coordinator thread touches replica stores (routing time /
+    barrier points), so they need no locking of their own.
+    """
+
+    __slots__ = ("oplog", "copies", "limbo")
+
+    def __init__(self):
+        # primary shard -> [[seq, stream, lba, fp, op, ts], ...] in seq order
+        self.oplog: Dict[int, List[list]] = {}
+        self.copies: Dict[int, int] = {}  # fp -> live keys referencing it here
+        # fps whose count hit zero while GC grace was armed: the dict entry
+        # (the physical copy) stays until a barrier point drains the limbo
+        self.limbo: List[int] = []
+
+    def log(self, primary: int, entry: list) -> None:
+        self.oplog.setdefault(primary, []).append(entry)
+
+    def add_copy(self, fp: int) -> None:
+        self.copies[fp] = self.copies.get(fp, 0) + 1
+
+    def drop_copy(self, fp: int, deferred: bool) -> None:
+        n = self.copies.get(fp)
+        if n is None:
+            return  # copy was placed while this shard was dead; nothing here
+        if n <= 1:
+            if deferred:
+                self.copies[fp] = 0  # logical free now, physical at drain
+                self.limbo.append(fp)
+            else:
+                del self.copies[fp]
+        else:
+            self.copies[fp] = n - 1
+
+    def drain_limbo(self) -> int:
+        """Barrier point: physically drop copies whose count is still zero.
+        A fingerprint re-replicated since its logical free stays live."""
+        dropped = 0
+        for fp in self.limbo:
+            if self.copies.get(fp) == 0:
+                del self.copies[fp]
+                dropped += 1
+        self.limbo = []
+        return dropped
+
+    @property
+    def blocks(self) -> int:
+        """Physical replica blocks held (limbo'd copies still occupy one)."""
+        return len(self.copies)
+
+    def to_tree(self) -> dict:
+        return {
+            "oplog": {str(p): log for p, log in self.oplog.items()},
+            "copies": pairs(self.copies),
+            "limbo": list(self.limbo),
+        }
+
+    @classmethod
+    def from_tree(cls, tree: dict) -> "_ReplicaStore":
+        rs = cls()
+        rs.oplog = {int(p): [list(e) for e in log] for p, log in tree["oplog"].items()}
+        rs.copies = from_pairs(tree["copies"], value=int)
+        rs.limbo = [int(fp) for fp in tree["limbo"]]
+        return rs
+
+
 class ShardedCluster:
     """N per-shard engines behind one ``Engine`` protocol."""
 
@@ -303,10 +450,15 @@ class ShardedCluster:
         vnodes: int = 64,
         seed: int = 0,
         pba_stride: int = 1 << 48,
+        replication_factor: int = 1,
         **engine_kwargs,
     ):
         if routing not in ("fingerprint", "stream"):
             raise ValueError(f"routing must be 'fingerprint' or 'stream', got {routing!r}")
+        if replication_factor < 1:
+            raise ValueError(f"replication_factor must be >= 1, got {replication_factor}")
+        if replication_factor > 1 and routing != "fingerprint":
+            raise ValueError("replication requires fingerprint routing")
         if engine_factory is None:
             self._engine_kwargs: Optional[dict] = dict(engine_kwargs)
             engine_factory = lambda shard: HPDedup(seed=seed + shard, **engine_kwargs)
@@ -346,6 +498,148 @@ class ShardedCluster:
         # than the work on tiny sub-batches; measured 0.41x on a 1-CPU host
         # under fingerprint routing).  Plain attribute, not serialized.
         self.min_parallel_batch = 2048
+        # coordinator mutual exclusion (see _locked) + executor fault state:
+        # shards whose worker raised are poisoned until fail/recover or a
+        # snapshot reload re-establishes their state
+        self._lock = threading.RLock()
+        self._poisoned: Dict[int, BaseException] = {}
+        self._init_replication(replication_factor)
+
+    def _init_replication(self, factor: int) -> None:
+        """Replication bookkeeping (all coordinator-owned; see the
+        "Replication & recovery" section of ARCHITECTURE.md).
+
+        ``factor`` is the *requested* R; the effective R is clamped to the
+        live shard count (never silently dropping copies — a warning marks
+        the degradation) and re-evaluated on resize."""
+        self.replication_factor = factor
+        self._failed: set = set()
+        self.failover_reads = 0
+        self.failover_misses = 0
+        self._rep_seq = 0  # cluster-global record sequence for oplog ordering
+        self._rep_chunk = 0  # chunk counter: recovery replays the original
+        # chunk alignment (engine state is chunk-boundary-sensitive by
+        # design: triggers split batches, replay_batched flushes per call)
+        self._rep_scalar = False  # transient: routing for the scalar path?
+        # authoritative (packed key -> current fingerprint): drives replica
+        # copy placement, eager overwrite fan-out, and mirror rebuilds
+        self._rep_keys: Dict[int, int] = {}
+        if factor > 1:
+            self._replicas: List[Optional[_ReplicaStore]] = [
+                _ReplicaStore() for _ in range(self.num_shards)
+            ]
+            self._since_ckpt = [0] * self.num_shards
+            # per-shard engine state trees at the last checkpoint: the base
+            # recover_shard restores before rolling the oplog forward
+            from .snapshot import snapshot_engine
+
+            self._ckpt: List[Optional[dict]] = [snapshot_engine(e) for e in self.shards]
+        else:
+            self._replicas = [None] * self.num_shards
+            self._since_ckpt = [0] * self.num_shards
+            self._ckpt = [None] * self.num_shards
+        self._warn_if_clamped()
+
+    @property
+    def effective_replication(self) -> int:
+        """Requested R clamped to the current shard count."""
+        return min(self.replication_factor, self.num_shards)
+
+    def _warn_if_clamped(self) -> None:
+        """Clamp + warn, never silently drop: R beyond the live shard count
+        degrades gracefully to one copy per shard, loudly."""
+        if self.replication_factor > self.num_shards:
+            warnings.warn(
+                f"replication_factor={self.replication_factor} exceeds "
+                f"{self.num_shards} shards; placing "
+                f"{self.effective_replication} copies until the cluster grows",
+                RuntimeWarning,
+                stacklevel=3,
+            )
+
+    @property
+    def replica_blocks(self) -> int:
+        """Physical blocks held by replica stores cluster-wide (the storage
+        cost of R > 1; the FASTEN dedup-ratio-vs-R denominator adds this)."""
+        return sum(rs.blocks for rs in self._replicas if rs is not None)
+
+    def _resync_replication(self) -> None:
+        """Wholesale replication rebuild at a quiesced topology change
+        (resize): re-derive the authoritative key->fp map from the flushed
+        engines, re-place every content mirror on the *new* ring, truncate
+        the oplogs, and take a fresh checkpoint of every shard.  Only valid
+        with all shards live and every mapping final."""
+        self._replicas = [
+            _ReplicaStore() if self.replication_factor > 1 else None
+            for _ in range(self.num_shards)
+        ]
+        self._since_ckpt = [0] * self.num_shards
+        if self.replication_factor <= 1:
+            self._ckpt = [None] * self.num_shards
+            self._rep_keys = {}
+            return
+        rep: Dict[int, int] = {}
+        for engine in self.shards:
+            store = engine.store
+            for (stream, lba), pba in store.lba_map.items():
+                rep[(stream << _LBA_BITS) + lba] = int(store.fp_of_pba[pba])
+        self._rep_keys = rep
+        r = self.effective_replication
+        if r > 1 and rep:
+            fps = np.fromiter(rep.values(), dtype=np.uint64, count=len(rep))
+            owners = self.ring.owners_of_many(fps, r)
+            for fp, row in zip(fps.tolist(), owners[:, 1:].tolist()):
+                for o in row:
+                    self._replicas[o].add_copy(fp)
+        from .snapshot import snapshot_engine
+
+        self._ckpt = [snapshot_engine(e) for e in self.shards]
+
+    def _load_replication(self, sub: Optional[dict]) -> None:
+        """Install replication state from a snapshot subtree (``None`` —
+        e.g. a pre-replication snapshot — means an R == 1 cluster)."""
+        if not sub:
+            self._init_replication(1)
+            return
+        self.replication_factor = int(sub["factor"])
+        self._failed = set()
+        self.failover_reads = int(sub["failover_reads"])
+        self.failover_misses = int(sub["failover_misses"])
+        self._rep_seq = int(sub["seq"])
+        self._rep_chunk = int(sub["chunk"])
+        self._rep_scalar = False
+        self._rep_keys = from_pairs(sub["rep_keys"], value=int)
+        self._since_ckpt = [int(x) for x in sub["since_ckpt"]]
+        self._replicas = [
+            _ReplicaStore.from_tree(t) if t is not None else None for t in sub["replicas"]
+        ]
+        self._ckpt = list(sub["ckpt"])
+
+    def _replication_tree(self) -> Optional[dict]:
+        """Snapshot subtree for the replication overlay (``None`` at R == 1:
+        nothing to carry, and pre-replication snapshots stay loadable)."""
+        if self.replication_factor <= 1:
+            return None
+        return {
+            "factor": self.replication_factor,
+            "seq": self._rep_seq,
+            "chunk": self._rep_chunk,
+            "failover_reads": self.failover_reads,
+            "failover_misses": self.failover_misses,
+            "rep_keys": pairs(self._rep_keys),
+            "since_ckpt": list(self._since_ckpt),
+            "replicas": [rs.to_tree() if rs is not None else None for rs in self._replicas],
+            "ckpt": self._ckpt,
+        }
+
+    def _check_poisoned(self) -> None:
+        if self._poisoned:
+            shards = sorted(self._poisoned)
+            raise ShardWorkerError(
+                f"shard workers {shards} faulted and their engines are "
+                "poisoned; recover with fail_shard()+recover_shard() per "
+                "shard, or reload the whole cluster from a snapshot"
+            )
 
     # -- parallel execution --------------------------------------------------------
     def start_executor(self, max_queued: int = 4) -> ParallelShardExecutor:
@@ -357,26 +651,45 @@ class ShardedCluster:
         shards drain chunk k.  The caller owns the lifecycle — call
         ``stop_executor()`` when done (``resize`` restarts it automatically
         because the shard count changes)."""
-        if self._executor is None:
-            self._executor = ParallelShardExecutor(self.num_shards, max_queued=max_queued)
-        return self._executor
+        with self._lock:
+            if self._executor is None:
+                self._executor = ParallelShardExecutor(self.num_shards, max_queued=max_queued)
+            return self._executor
 
     def stop_executor(self) -> None:
-        """Drain outstanding work, then stop and detach the worker threads."""
-        ex, self._executor = self._executor, None
-        self._workers_dirty = False
-        if ex is not None:
-            try:
-                ex.barrier()
-            finally:
-                ex.close()
+        """Drain outstanding work, then stop and detach the worker threads.
+
+        Teardown never re-raises a sticky ``ShardWorkerError`` (the fault
+        already surfaced — or will — at an engine call): faulted shards are
+        recorded as *poisoned* instead, so the cluster is cleanly stoppable
+        and restartable after an injected worker fault, and later engine
+        calls raise one clear error naming the recovery paths
+        (``fail_shard``/``recover_shard`` or a snapshot reload)."""
+        with self._lock:
+            ex, self._executor = self._executor, None
+            self._workers_dirty = False
+            if ex is not None:
+                try:
+                    ex.barrier()
+                except ShardWorkerError:
+                    self._poisoned.update(ex.failed_shards())
+                finally:
+                    ex.close()
 
     def _sync(self) -> None:
         """Barrier-and-merge point: wait for all in-flight shard work before
         the coordinator touches shard engines (reports, snapshots, resize,
         scalar paths, probes).  No-op without an executor."""
-        if self._executor is not None:
-            self._executor.barrier()
+        self._check_poisoned()
+        ex = self._executor
+        if ex is not None:
+            try:
+                ex.barrier()
+            except ShardWorkerError:
+                # record *which* shards faulted before propagating, so the
+                # cluster stays cleanly stoppable/recoverable afterwards
+                self._poisoned.update(ex.failed_shards())
+                raise
             self._workers_dirty = False
 
     def _submit_pinned(self, shard: int, fn: Callable[[], object]) -> None:
@@ -394,18 +707,33 @@ class ShardedCluster:
             finally:
                 store.unpin_epoch(tag)
 
-        self._executor.submit(shard, _run)
-        self._workers_dirty = True
+        try:
+            self._executor.submit(shard, _run)
+        except ShardWorkerError:
+            # the lane already faulted: record the poison and skip the
+            # submission instead of aborting the whole scatter — healthy
+            # lanes keep executing, this lane's records are already in the
+            # replication oplog, and the fault surfaces at the call-end
+            # barrier with the recovery paths named
+            store.unpin_epoch(tag)
+            self._poisoned.update(self._executor.failed_shards())
+        except BaseException:
+            # any other rejection (closed executor) never ran _run: release
+            # the pin here or the grace period wedges open and limbo can no
+            # longer drain without force
+            store.unpin_epoch(tag)
+            raise
+        else:
+            self._workers_dirty = True
 
     def _run_inline(self, parts, runner) -> None:
         """Coalesced path: run a chunk's sub-batches on the coordinator.
         Any still-queued worker item for these shards must finish first —
         shard engines are single-touch (see ParallelShardExecutor)."""
         if self._workers_dirty:
-            self._executor.barrier()
-            self._workers_dirty = False
+            self._sync()
         for s, sub in enumerate(parts):
-            if sub is not None:
+            if sub is not None and s not in self._failed:
                 runner(s, sub)
 
     def _make_shard_engine(self, shard: int):
@@ -444,15 +772,26 @@ class ShardedCluster:
         """Per-record shard ids for one chunk — identical to scalar routing.
 
         Writes hash their fingerprint; reads consult the routing directory
-        (falling back to the stream hash for never-written keys).  The
-        vectorized path is valid whenever no read in the chunk touches a
-        key written earlier in the same chunk; otherwise the chunk's
-        routing replays per record so directory semantics stay exact.
+        (falling back to the stream hash for never-written keys — or for
+        keys whose directory row points at a shard index the cluster no
+        longer has, the dangling rows an unmap-then-shrink used to leave
+        behind).  The vectorized path is valid whenever no read in the
+        chunk touches a key written earlier in the same chunk; otherwise
+        the chunk's routing replays per record so directory semantics stay
+        exact.  Routing is also the replication choke point: every routed
+        record passes through ``_replicate_chunk`` exactly once.
         """
+        sid = self._route_chunk_ids(rb)
+        if self.replication_factor > 1 or self._failed:
+            self._replicate_chunk(rb, sid)
+        return sid
+
+    def _route_chunk_ids(self, rb: ReplayBatch) -> np.ndarray:
         if self.num_shards == 1:
             return np.zeros(len(rb), dtype=np.int64)  # identity cluster
         if self.routing == "stream":
             return self.ring.shard_of_many(rb.stream.astype(np.uint64))
+        num = self.num_shards
         sid = self.ring.shard_of_many(rb.fp)
         packed = self._packed_keys(rb.stream, rb.lba)
         directory = self._directory
@@ -470,11 +809,15 @@ class ShardedCluster:
         if not bool(np.isin(packed[r_mask], w_packed).any()):
             # no read sees an in-chunk write: pre-chunk directory is exact
             sid = sid.copy()
-            sid[r_mask] = np.fromiter(
+            lookup = np.fromiter(
                 (directory.get(k, d) for k, d in zip(r_keys, stream_sid.tolist())),
                 dtype=np.int64,
                 count=len(r_keys),
             )
+            stale = lookup >= num  # dangling rows -> stream-hash fallback
+            if bool(stale.any()):
+                lookup[stale] = stream_sid[stale]
+            sid[r_mask] = lookup
             directory.update(zip(w_packed.tolist(), sid[is_w].tolist()))
             return sid
         out = np.empty(len(rb), dtype=np.int64)
@@ -484,8 +827,136 @@ class ShardedCluster:
                 directory[key] = fs
                 out[i] = fs
             else:
-                out[i] = directory.get(key, next(read_default))
+                d = next(read_default)
+                v = directory.get(key, d)
+                out[i] = v if v < num else d
         return out
+
+    # -- replication (R-way placement, failover, recovery logs) --------------------
+    def _replica_owners(self, fp: int) -> List[int]:
+        """The non-primary replica shards for ``fp``'s content (ring
+        successors, distinct physical shards); empty when R_eff == 1."""
+        r = self.effective_replication
+        if r <= 1:
+            return []
+        owners = self.ring.owners_of_many(np.asarray([fp], dtype=np.uint64), r)
+        return owners[0, 1:].tolist()
+
+    def _drop_replica_copies(self, fp: int) -> None:
+        """One key stopped referencing ``fp``: decrement its replica copies.
+        While online GC has armed deferred reclaim, a copy whose refcount
+        hits zero parks in the replica's limbo and is physically dropped
+        only at the next barrier point — the replica-side grace period."""
+        deferred = self._gc_deferred
+        for o in self._replica_owners(fp):
+            rs = self._replicas[o]
+            if rs is not None:
+                rs.drop_copy(fp, deferred)
+
+    def _drain_replica_limbo(self) -> int:
+        """Barrier point: every replica drains its deferred copy frees."""
+        return sum(rs.drain_limbo() for rs in self._replicas if rs is not None)
+
+    def _log_entry(self, s: int, entry: list) -> None:
+        """Append one oplog entry for primary ``s`` to its R_eff-1 live ring
+        successors (the log holders recovery merges)."""
+        self._since_ckpt[s] += 1
+        num, r = self.num_shards, self.effective_replication
+        failed, replicas = self._failed, self._replicas
+        logged, j = 0, 1
+        while logged < r - 1 and j < num:
+            t = (s + j) % num
+            if t not in failed and replicas[t] is not None:
+                replicas[t].log(s, entry)
+                logged += 1
+            j += 1
+
+    # control-event ops in the oplog (data records carry the trace op, or
+    # -1 for the tsless write_batch path):
+    _OP_FLUSH = -2  # engine_finish_replay fired (replay_batched call end)
+    _OP_UNMAP = -3  # cluster-level unmap hit this shard's store
+
+    def _log_control(self, s: int, op: int, stream: int = 0, lba: int = 0) -> None:
+        """Log a control event for primary ``s``: engine mutations that are
+        not routed records (per-call flushes, deletes) must still roll
+        forward in sequence during recovery."""
+        if self.replication_factor <= 1:
+            return
+        seq = self._rep_seq
+        self._rep_seq += 1
+        self._rep_chunk += 1
+        self._log_entry(s, [seq, stream, lba, 0, op, 0, self._rep_chunk, 0])
+
+    def _replicate_chunk(self, rb: ReplayBatch, sid: np.ndarray) -> None:
+        """Replication bookkeeping for one routed chunk (coordinator only).
+
+        For every record, in routing order: assign the cluster-global
+        sequence number, append the record to the oplog of R_eff-1 live
+        successors of its *primary* shard (the roll-forward log recovery
+        replays), and for writes maintain the authoritative key->fp map
+        plus the content mirrors — R_eff-1 replica copies of the new
+        fingerprint placed on its ring successors, with eager overwrite
+        fan-out dropping the old content's copies.  Records whose primary
+        is failed are logged but not executed (recovery replays them);
+        reads against a failed primary are served from the mirror
+        (``failover_reads``) or counted as misses."""
+        factor = self.replication_factor
+        failed = self._failed
+        replicas = self._replicas
+        rep_keys = self._rep_keys
+        num = self.num_shards
+        r = self.effective_replication
+        streams = rb.stream.tolist()
+        lbas = rb.lba.tolist()
+        fps = rb.fp.tolist()
+        sids = sid.tolist()
+        ops = rb.op.tolist() if rb.op is not None else None
+        tss = rb.ts.tolist() if rb.ts is not None else None
+        owners = None
+        if factor > 1 and r > 1:
+            owners = self.ring.owners_of_many(rb.fp, r)
+        self._rep_chunk += 1
+        chunk = self._rep_chunk
+        scalar = 1 if self._rep_scalar else 0
+        for i in range(len(sids)):
+            s = sids[i]
+            fp = fps[i]
+            # op -1 marks a tsless write_batch-style record so recovery can
+            # replay it down the same code path it originally took; the
+            # chunk id + scalar flag pin the original execution alignment
+            # (engine state is chunk-boundary-sensitive, so recovery must
+            # re-batch exactly as the live run did)
+            op = ops[i] if ops is not None else -1
+            is_write = ops is None or ops[i] == OP_WRITE
+            seq = self._rep_seq
+            self._rep_seq += 1
+            if factor > 1:
+                entry = [
+                    seq, streams[i], lbas[i], fp, op,
+                    tss[i] if tss is not None else 0, chunk, scalar,
+                ]
+                self._log_entry(s, entry)
+            packed = (streams[i] << _LBA_BITS) + lbas[i]
+            if is_write and factor > 1:
+                old = rep_keys.get(packed)
+                if old != fp:
+                    if old is not None:
+                        self._drop_replica_copies(old)
+                    rep_keys[packed] = fp
+                    if owners is not None:
+                        for o in owners[i, 1:].tolist():
+                            rs = replicas[o]
+                            if rs is not None:
+                                rs.add_copy(fp)
+            if s in failed and not is_write:
+                cur = rep_keys.get(packed)
+                if cur is not None and any(
+                    replicas[o] is not None and replicas[o].copies.get(cur, 0) > 0
+                    for o in self._replica_owners(cur)
+                ):
+                    self.failover_reads += 1
+                else:
+                    self.failover_misses += 1
 
     def probe_fps(self, fps) -> np.ndarray:
         """Cluster-wide exact membership: has any shard ever seen each
@@ -498,6 +969,7 @@ class ShardedCluster:
         keys = np.ascontiguousarray(fps, dtype=np.uint64)
         if keys.size == 0:
             return np.zeros(0, dtype=bool)
+        self._check_not_failed("probe_fps")
         self._sync()  # probes read engine state the workers may be mutating
         if self.num_shards == 1:
             return _probe_seen(self.shards[0], keys)
@@ -521,13 +993,16 @@ class ShardedCluster:
         return out
 
     # -- Engine protocol ----------------------------------------------------------
+    @_locked
     def write_batch(self, streams, lbas, fps) -> np.ndarray:
         """Scatter aligned write columns across shards; gather inline flags.
 
         With an executor attached, each shard's sub-batch runs on its worker
         thread and the flags are gathered after the barrier — per-shard
         record sequences are identical to the serial path, so the flags (and
-        all engine state) are bit-exact."""
+        all engine state) are bit-exact.  Records routed to a failed shard
+        are logged for recovery but not executed; their flags read False."""
+        self._check_poisoned()
         rb = ReplayBatch(np.asarray(streams), np.asarray(lbas), np.asarray(fps))
         sid = self._route_chunk(rb)
         out = np.zeros(len(rb), dtype=bool)
@@ -536,12 +1011,14 @@ class ShardedCluster:
         largest = max((len(sub) for sub in parts if sub is not None), default=0)
         if ex is None or self.num_shards == 1 or largest < self.min_parallel_batch:
             if ex is not None and self._workers_dirty:
-                ex.barrier()
-                self._workers_dirty = False
+                self._sync()
             flags = []
             for s, sub in enumerate(parts):
                 if sub is not None:
-                    flags.append(self.shards[s].write_batch(sub.stream, sub.lba, sub.fp))
+                    if s in self._failed:
+                        flags.append(np.zeros(len(sub), dtype=bool))
+                    else:
+                        flags.append(self.shards[s].write_batch(sub.stream, sub.lba, sub.fp))
         else:
             results: List[Optional[np.ndarray]] = [None] * self.num_shards
 
@@ -549,22 +1026,34 @@ class ShardedCluster:
                 results[s] = self.shards[s].write_batch(sub.stream, sub.lba, sub.fp)
 
             for s, sub in enumerate(parts):
-                if sub is not None:
+                if sub is not None and s not in self._failed:
                     self._submit_pinned(s, lambda s=s, sub=sub: _run(s, sub))
-            ex.barrier()
-            self._workers_dirty = False
-            flags = [results[s] for s, sub in enumerate(parts) if sub is not None]
+            self._sync()
+            flags = [
+                results[s] if results[s] is not None else np.zeros(len(sub), dtype=bool)
+                for s, sub in enumerate(parts)
+                if sub is not None
+            ]
         if flags:
             out[order] = np.concatenate(flags)
         return out
 
+    @_locked
     def replay(self, trace: np.ndarray) -> "ShardedCluster":
         """Scalar reference path: route per record, replay each shard's
         sub-trace through its engine's per-record oracle."""
         assert trace.dtype == TRACE_DTYPE
         self._sync()
-        sid = self._route_chunk(ReplayBatch.from_trace(trace))
+        # mark the chunk scalar: recovery must replay these records through
+        # the per-record oracle, not the batched driver
+        self._rep_scalar = True
+        try:
+            sid = self._route_chunk(ReplayBatch.from_trace(trace))
+        finally:
+            self._rep_scalar = False
         for s in range(self.num_shards):
+            if s in self._failed:
+                continue
             idx = np.nonzero(sid == s)[0]
             if idx.size:
                 self.shards[s].replay(trace[idx])
@@ -594,40 +1083,41 @@ class ShardedCluster:
         necessarily drained) — the hook the online-GC harness and benchmark
         use to schedule ``run_gc(wait=False)`` against genuinely in-flight
         traffic."""
-        own = parallel and self._executor is None and self.num_shards > 1
-        if own:
-            self.start_executor()
-        ex = self._executor
-        rb = ReplayBatch.from_trace(trace)
-        try:
-            for i, chunk in enumerate(rb.batches(batch_size * self.num_shards)):
-                sid = self._route_chunk(chunk)
-                parts, _ = chunk.scatter(sid, self.num_shards)
-                largest = max((len(sub) for sub in parts if sub is not None), default=0)
-                if ex is None or largest < self.min_parallel_batch:
-                    if ex is not None:
-                        self._run_inline(
-                            parts, lambda s, sub: engine_run_batch(self.shards[s], sub)
-                        )
+        with self._lock:
+            self._check_poisoned()
+            own = parallel and self._executor is None and self.num_shards > 1
+            if own:
+                self.start_executor()
+            rb = ReplayBatch.from_trace(trace)
+            try:
+                for i, chunk in enumerate(rb.batches(batch_size * self.num_shards)):
+                    ex = self._executor  # on_chunk may fail/recover shards
+                    sid = self._route_chunk(chunk)
+                    parts, _ = chunk.scatter(sid, self.num_shards)
+                    largest = max((len(sub) for sub in parts if sub is not None), default=0)
+                    if ex is None or largest < self.min_parallel_batch:
+                        if ex is not None:
+                            self._run_inline(
+                                parts, lambda s, sub: engine_run_batch(self.shards[s], sub)
+                            )
+                        else:
+                            for s, sub in enumerate(parts):
+                                if sub is not None and s not in self._failed:
+                                    engine_run_batch(self.shards[s], sub)
                     else:
                         for s, sub in enumerate(parts):
-                            if sub is not None:
-                                engine_run_batch(self.shards[s], sub)
-                else:
-                    for s, sub in enumerate(parts):
-                        if sub is not None:
-                            engine = self.shards[s]
-                            self._submit_pinned(
-                                s, lambda engine=engine, sub=sub: engine_run_batch(engine, sub)
-                            )
-                if on_chunk is not None:
-                    on_chunk(i)
-            if ex is not None:
-                ex.barrier()
-                self._workers_dirty = False
-        finally:
-            if own:
-                self.stop_executor()
+                            if sub is not None and s not in self._failed:
+                                engine = self.shards[s]
+                                self._submit_pinned(
+                                    s, lambda engine=engine, sub=sub: engine_run_batch(engine, sub)
+                                )
+                    if on_chunk is not None:
+                        on_chunk(i)
+                if self._executor is not None:
+                    self._sync()
+            finally:
+                if own:
+                    self.stop_executor()
         return self
 
     def replay_batched(
@@ -641,23 +1131,31 @@ class ShardedCluster:
         ``batch_size * num_shards`` records so per-shard sub-batches stay
         near the tuned batch size.  ``parallel=True`` runs the shards on
         worker threads (pipelined coordinator, see ``ingest_batched``)."""
-        own = parallel and self._executor is None and self.num_shards > 1
-        if own:
-            self.start_executor()
-        try:
-            self.ingest_batched(trace, batch_size, parallel=parallel)
-            ex = self._executor
-            if ex is None:
-                for engine in self.shards:
-                    engine_finish_replay(engine)
-            else:
-                for s, engine in enumerate(self.shards):
-                    self._submit_pinned(s, lambda engine=engine: engine_finish_replay(engine))
-                ex.barrier()
-                self._workers_dirty = False
-        finally:
+        with self._lock:
+            own = parallel and self._executor is None and self.num_shards > 1
             if own:
-                self.stop_executor()
+                self.start_executor()
+            try:
+                self.ingest_batched(trace, batch_size, parallel=parallel)
+                # the per-call flush is engine-visible state: log it so a
+                # failed shard's recovery replays it at the same point
+                for s in range(self.num_shards):
+                    self._log_control(s, self._OP_FLUSH)
+                ex = self._executor
+                if ex is None:
+                    for s, engine in enumerate(self.shards):
+                        if s not in self._failed:
+                            engine_finish_replay(engine)
+                else:
+                    for s, engine in enumerate(self.shards):
+                        if s not in self._failed:
+                            self._submit_pinned(
+                                s, lambda engine=engine: engine_finish_replay(engine)
+                            )
+                    self._sync()
+            finally:
+                if own:
+                    self.stop_executor()
         return self
 
     def replay_batched_timed(self, trace: np.ndarray, batch_size: int = DEFAULT_BATCH_SIZE):
@@ -674,28 +1172,31 @@ class ShardedCluster:
         """
         import time
 
-        self._sync()
-        t_route = t_scatter = 0.0
-        shard_times = [0.0] * self.num_shards
-        rb = ReplayBatch.from_trace(trace)
-        for chunk in rb.batches(batch_size * self.num_shards):
-            t0 = time.perf_counter()
-            sid = self._route_chunk(chunk)
-            t1 = time.perf_counter()
-            parts, _ = chunk.scatter(sid, self.num_shards)
-            t2 = time.perf_counter()
-            t_route += t1 - t0
-            t_scatter += t2 - t1
-            for s, sub in enumerate(parts):
-                if sub is not None:
-                    t3 = time.perf_counter()
-                    engine_run_batch(self.shards[s], sub)
-                    shard_times[s] += time.perf_counter() - t3
-        for s, engine in enumerate(self.shards):
-            t3 = time.perf_counter()
-            engine_finish_replay(engine)
-            shard_times[s] += time.perf_counter() - t3
-        return {"route": t_route, "scatter": t_scatter, "shard_times": shard_times}
+        with self._lock:
+            self._sync()
+            t_route = t_scatter = 0.0
+            shard_times = [0.0] * self.num_shards
+            rb = ReplayBatch.from_trace(trace)
+            for chunk in rb.batches(batch_size * self.num_shards):
+                t0 = time.perf_counter()
+                sid = self._route_chunk(chunk)
+                t1 = time.perf_counter()
+                parts, _ = chunk.scatter(sid, self.num_shards)
+                t2 = time.perf_counter()
+                t_route += t1 - t0
+                t_scatter += t2 - t1
+                for s, sub in enumerate(parts):
+                    if sub is not None and s not in self._failed:
+                        t3 = time.perf_counter()
+                        engine_run_batch(self.shards[s], sub)
+                        shard_times[s] += time.perf_counter() - t3
+            for s, engine in enumerate(self.shards):
+                if s in self._failed:
+                    continue
+                t3 = time.perf_counter()
+                engine_finish_replay(engine)
+                shard_times[s] += time.perf_counter() - t3
+            return {"route": t_route, "scatter": t_scatter, "shard_times": shard_times}
 
     def replay_batched_parallel_timed(
         self, trace: np.ndarray, batch_size: int = DEFAULT_BATCH_SIZE
@@ -745,10 +1246,12 @@ class ShardedCluster:
                 dropped += 1
         return dropped
 
+    @_locked
     def finish(self) -> HybridReport:
         """Finish every shard (flush + shard-local exact phase) and aggregate.
         Shards retired by ``resize`` shrinks contribute their accrued
         counters through ``_retired_reports``."""
+        self._check_not_failed("finish")
         self._sync()  # barrier-and-merge: no in-flight shard work past here
         for engine in self.shards:
             engine_finish_replay(engine)  # flush pending runs: mappings final
@@ -757,10 +1260,23 @@ class ShardedCluster:
             # full barrier: no write is in flight, so every grace period has
             # drained — force-reclaim any limbo left by online GC
             engine.store.collect_limbo(force=True)
+        self._drain_replica_limbo()  # replica grace periods drain here too
         self.shard_reports = [engine.finish() for engine in self.shards]
+        if self.replication_factor > 1:
+            # the exact phase mutated engine state outside the oplog: refresh
+            # the recovery base so a later failure rolls forward from here
+            self.checkpoint()
         return aggregate_reports(self.shard_reports + self._retired_reports)
 
+    def _check_not_failed(self, what: str) -> None:
+        if self._failed:
+            raise RuntimeError(
+                f"{what} requires every shard live; shards "
+                f"{sorted(self._failed)} are failed — recover_shard() first"
+            )
+
     # -- shard-local post-processing (idle cleanup windows) ------------------------
+    @_locked
     def run_postprocess(
         self, to_exact: bool = False, max_merges_per_shard: Optional[int] = None
     ) -> int:
@@ -768,6 +1284,7 @@ class ShardedCluster:
         locally (optionally budgeted), no cross-shard coordination beyond
         the router's stale-key invalidations.  Returns the number of disk
         blocks reclaimed across the cluster."""
+        self._check_not_failed("run_postprocess")
         self._sync()
         before = self.reclaimed_blocks
         for engine in self.shards:
@@ -780,9 +1297,14 @@ class ShardedCluster:
                 engine.post.run_to_exact()
             else:
                 engine.post.run(max_merges=max_merges_per_shard)
+        if self.replication_factor > 1:
+            # postprocess merges are engine state outside the oplog: refresh
+            # the recovery base (also truncates the logs — a cheap bound)
+            self.checkpoint()
         return self.reclaimed_blocks - before
 
     # -- online GC (epoch drain + compaction, no quiesce) ---------------------------
+    @_locked
     def run_gc(
         self,
         max_moves_per_shard: Optional[int] = None,
@@ -803,9 +1325,11 @@ class ShardedCluster:
         """
         from .gc import gc_engine
 
+        self._check_poisoned()
         self._gc_deferred = True
         for engine in self.shards:
-            engine.store.deferred_reclaim = True
+            if engine is not None:
+                engine.store.deferred_reclaim = True
         ex = self._executor
         slots: List[Optional[Dict[str, int]]] = [None] * self.num_shards
 
@@ -816,17 +1340,28 @@ class ShardedCluster:
 
         if ex is None:
             for s, engine in enumerate(self.shards):
-                _gc(s, engine)
+                if s not in self._failed:
+                    _gc(s, engine)
         else:
             for s, engine in enumerate(self.shards):
+                if s in self._failed:
+                    continue
                 # deliberately unpinned: GC must not pin the epoch it is
                 # about to drain
                 ex.submit(s, lambda s=s, engine=engine: _gc(s, engine))
             self._workers_dirty = True
             if not wait:
                 return None
-            ex.barrier()
-            self._workers_dirty = False
+            self._sync()
+        # wait=True is a barrier point: replica-side grace periods drain
+        # alongside the engine-side epochs
+        self._drain_replica_limbo()
+        if self.replication_factor > 1 and not self._failed:
+            # GC moves/merges are engine state outside the oplog: refresh
+            # the recovery base at the barrier.  (wait=False leaves a window
+            # — a shard failing while a queued GC step is unbarriered
+            # recovers to pre-GC state; see ARCHITECTURE.md.)
+            self.checkpoint()
         totals: Dict[str, int] = {}
         for st in slots:
             for k, v in (st or {}).items():
@@ -836,18 +1371,22 @@ class ShardedCluster:
     @property
     def reclaimed_blocks(self) -> int:
         """Cluster-wide reclaim counter (see ``BlockStore.freed_blocks``)."""
-        return sum(engine.store.freed_blocks for engine in self.shards)
+        return sum(e.store.freed_blocks for e in self.shards if e is not None)
 
     @property
     def relocated_blocks(self) -> int:
         """Cluster-wide compaction counter (see ``BlockStore.compact``)."""
-        return sum(engine.store.relocated_blocks for engine in self.shards)
+        return sum(e.store.relocated_blocks for e in self.shards if e is not None)
 
     # -- invariants ----------------------------------------------------------------
+    @_locked
     def check_consistency(self) -> None:
-        """Per-shard store invariants + fingerprint-partition disjointness."""
+        """Per-shard store invariants + fingerprint-partition disjointness
+        (failed shards are skipped — they have no engine to check)."""
         self._sync()
         for s, engine in enumerate(self.shards):
+            if s in self._failed:
+                continue
             engine.store.check_consistency()
             if self.routing == "fingerprint":
                 fps = list(engine.store.fp_table.keys())
@@ -857,7 +1396,197 @@ class ShardedCluster:
                         f"shard {s} stores fingerprints owned by other shards"
                     )
 
+    # -- deletes (cluster-level unmap with replica fan-out) ------------------------
+    @_locked
+    def unmap(self, stream: int, lba: int) -> Optional[int]:
+        """Delete one (stream, lba) key cluster-wide: route through the
+        directory, unmap on the owning shard, fan the invalidation out to
+        every replica copy, and drop the routing row so a later shrink
+        cannot leave it dangling.  Returns the freed PBA (or ``None`` if
+        the key was unknown)."""
+        self._sync()
+        packed = (int(stream) << _LBA_BITS) + int(lba)
+        owner = self._directory.get(packed)
+        if self.num_shards == 1:
+            owner = 0
+        if owner is not None and owner < self.num_shards and owner not in self._failed:
+            candidates = [owner]
+        else:
+            # no (valid) directory row — stream routing, the pre-multi-shard
+            # era, or a failed owner: probe every live shard for the key
+            candidates = [s for s in range(self.num_shards) if s not in self._failed]
+        pba = None
+        hit = None
+        for s in candidates:
+            pba = self.shards[s].store.unmap(int(stream), int(lba))
+            if pba is not None:
+                hit = s
+                break
+        if hit is None and owner is not None and owner in self._failed:
+            hit = owner  # key lives on the dead shard: recovery must unmap it
+        if hit is not None:
+            self._log_control(hit, self._OP_UNMAP, int(stream), int(lba))
+        self._directory.pop(packed, None)
+        old = self._rep_keys.pop(packed, None)
+        if old is not None:
+            self._drop_replica_copies(old)
+        return pba
+
+    # -- shard failure and recovery ------------------------------------------------
+    @_locked
+    def checkpoint(self) -> None:
+        """Refresh every shard's recovery base state and truncate the
+        roll-forward oplogs (a deterministic barrier point: replica-side
+        grace periods drain here too).  Recovery of a failed shard replays
+        only the records its primary routed since the last checkpoint, so
+        periodic checkpoints bound both oplog memory and recovery time.
+        No-op at R == 1 (nothing holds the logs)."""
+        self._check_not_failed("checkpoint")
+        self._sync()
+        if self.replication_factor <= 1:
+            return
+        from .snapshot import snapshot_engine
+
+        self._drain_replica_limbo()
+        self._ckpt = [snapshot_engine(e) for e in self.shards]
+        self._since_ckpt = [0] * self.num_shards
+        for rs in self._replicas:
+            if rs is not None:
+                rs.oplog = {}
+
+    @_locked
+    def fail_shard(self, s: int) -> None:
+        """Kill shard ``s``: its engine (and its replica mirror) are gone.
+
+        Traffic keeps flowing — records whose primary is ``s`` are logged
+        to the surviving oplog holders but not executed, reads fail over to
+        the content mirrors — until ``recover_shard`` rebuilds the engine.
+        A lane poisoned by an injected worker fault is the expected entry
+        path: the sticky error is absorbed here (the executor is restarted
+        clean) and the shard transitions to cleanly-failed."""
+        if self.routing != "fingerprint":
+            raise RuntimeError("fail_shard requires fingerprint routing")
+        if not 0 <= s < self.num_shards:
+            raise IndexError(f"shard {s} out of range")
+        if s in self._failed:
+            raise ValueError(f"shard {s} is already failed")
+        ex = self._executor
+        if ex is not None:
+            try:
+                ex.barrier()
+                self._workers_dirty = False
+            except ShardWorkerError:
+                self._poisoned.update(ex.failed_shards())
+            if self._poisoned:
+                # sticky worker errors wedge every later submission: replace
+                # the executor wholesale (stop_executor absorbs the fault)
+                self.stop_executor()
+                self.start_executor()
+        self._poisoned.pop(s, None)
+        self.shards[s] = None
+        self._replicas[s] = None
+        self._failed.add(s)
+
+    @_locked
+    def recover_shard(self, s: int) -> Dict[str, int]:
+        """Rebuild failed shard ``s`` bit-exactly: restore its last
+        checkpoint state tree, roll the merged surviving oplogs forward
+        through the same engine entry points the records originally took,
+        and re-derive its replica mirror from the authoritative key map.
+        Raises if the oplog is incomplete (R == 1, or every log holder for
+        some span also died — data loss is reported, never papered over)."""
+        if s not in self._failed:
+            raise ValueError(f"shard {s} is not failed")
+        self._sync()
+        if self._ckpt[s] is None:
+            raise RuntimeError(
+                f"shard {s} is unrecoverable: no replica log exists at "
+                f"replication_factor={self.replication_factor} (need R >= 2)"
+            )
+        from .snapshot import restore_engine, snapshot_engine
+
+        # merge + dedup the per-primary logs from every surviving holder
+        merged: Dict[int, list] = {}
+        for rs in self._replicas:
+            if rs is None:
+                continue
+            for e in rs.oplog.get(s, ()):
+                merged[e[0]] = e
+        log = [merged[k] for k in sorted(merged)]
+        if len(log) != self._since_ckpt[s]:
+            raise RuntimeError(
+                f"shard {s} is unrecoverable: oplog covers {len(log)} of "
+                f"{self._since_ckpt[s]} records since the last checkpoint "
+                f"(insufficient surviving replicas)"
+            )
+        engine = restore_engine(self._ckpt[s])
+        engine.store.deferred_reclaim = self._gc_deferred
+        # roll forward grouped by the *original* chunk ids: engine state is
+        # chunk-boundary-sensitive by design (triggers split batches, the
+        # per-call flush is an event), so recovery re-batches exactly as
+        # the live run executed — same sub-batch per chunk, same entry
+        # point per kind (write_batch / batched driver / scalar oracle),
+        # control events (flush, unmap) applied in sequence
+        i, n = 0, len(log)
+        while i < n:
+            op = log[i][4]
+            if op == self._OP_FLUSH:
+                engine_finish_replay(engine)
+                i += 1
+                continue
+            if op == self._OP_UNMAP:
+                engine.store.unmap(log[i][1], log[i][2])
+                i += 1
+                continue
+            chunk = log[i][6]
+            j = i
+            while j < n and log[j][6] == chunk:
+                j += 1
+            run = log[i:j]
+            streams = np.asarray([e[1] for e in run], dtype=np.int32)
+            lbas = np.asarray([e[2] for e in run], dtype=np.int64)
+            fps = np.asarray([e[3] for e in run], dtype=np.uint64)
+            if op == -1:
+                engine.write_batch(streams, lbas, fps)
+            elif run[0][7]:
+                sub = np.zeros(len(run), dtype=TRACE_DTYPE)
+                sub["stream"], sub["lba"], sub["fp"] = streams, lbas, fps
+                sub["op"] = [e[4] for e in run]
+                sub["ts"] = [e[5] for e in run]
+                engine.replay(sub)
+            else:
+                rb = ReplayBatch(
+                    streams,
+                    lbas,
+                    fps,
+                    op=np.asarray([e[4] for e in run], dtype=np.int8),
+                    ts=np.asarray([e[5] for e in run], dtype=np.int64),
+                )
+                engine_run_batch(engine, rb)
+            i = j
+        self.shards[s] = engine
+        self._failed.discard(s)
+        # re-derive this shard's content mirror from the authoritative
+        # key->fp map (one copy per key whose fp lists s as a successor)
+        rs = _ReplicaStore()
+        r = self.effective_replication
+        if r > 1 and self._rep_keys:
+            fps_arr = np.fromiter(
+                self._rep_keys.values(), dtype=np.uint64, count=len(self._rep_keys)
+            )
+            owners = self.ring.owners_of_many(fps_arr, r)
+            for fp, row in zip(fps_arr.tolist(), owners[:, 1:].tolist()):
+                if s in row:
+                    rs.add_copy(fp)
+        self._replicas[s] = rs
+        # restore full redundancy with a fresh cluster-wide checkpoint —
+        # unless other shards are still down (their recovery does it)
+        if not self._failed and not self._poisoned:
+            self.checkpoint()
+        return {"replayed": len(log), "mirror_copies": rs.blocks}
+
     # -- elastic resharding --------------------------------------------------------
+    @_locked
     def resize(
         self,
         new_num_shards: int,
@@ -900,6 +1629,8 @@ class ShardedCluster:
                 "resize() requires fingerprint routing; stream-affinity "
                 "clusters would need whole-stream migration"
             )
+        self._check_not_failed("resize")
+        self._check_poisoned()
         if engine_factory is not None:
             self._engine_factory = engine_factory
             self._engine_kwargs = None
@@ -1014,6 +1745,12 @@ class ShardedCluster:
             retired, self.shards = self.shards[new_num_shards:], self.shards[:new_num_shards]
             for engine in retired:
                 self._retired_reports.append(engine.finish())
+            # scrub directory rows that still point at retired shard ids:
+            # migration rewrote the rows of every *live* key, but rows for
+            # keys deleted via the raw store (never re-written) would dangle
+            self._directory = {
+                k: v for k, v in self._directory.items() if v < new_num_shards
+            }
 
         self.ring = new_ring
         self.num_shards = new_num_shards
@@ -1027,18 +1764,29 @@ class ShardedCluster:
                 if hasattr(engine, "run_postprocess"):
                     engine.run_postprocess()
                     stats["reconciled_shards"].append(t)
+        # replication overlay follows the new topology wholesale: mirrors
+        # re-placed on the new ring, oplogs truncated, fresh checkpoints of
+        # the post-reconcile engines (recovery must not replay reconcile)
+        self._resync_replication()
+        self._warn_if_clamped()
         if had_executor:
             self.start_executor()  # fresh workers sized to the new ring
         return stats
 
     # -- snapshot/restore ----------------------------------------------------------
+    @_locked
     def snapshot(self) -> dict:
         """Cluster state tree: per-shard engine trees (each in its own
-        versioned envelope), the routing directory, and the reports of
-        retired shards.  The ring is a pure function of (num_shards, vnodes,
-        seed) and is rebuilt on restore."""
+        versioned envelope), the routing directory, the reports of retired
+        shards, and the replication overlay (when R > 1).  The ring is a
+        pure function of (num_shards, vnodes, seed) and is rebuilt on
+        restore.  Serialization holds the coordinator lock and barriers the
+        workers first, so a snapshot is always a consistent barrier state —
+        never a mid-mutation view (and never while a shard is failed: a
+        dead engine has no tree; recover first)."""
         from .snapshot import report_to_tree, snapshot_engine
 
+        self._check_not_failed("snapshot")
         self._sync()  # snapshots are barrier states: no in-flight sub-batches
         return {
             "config": {
@@ -1053,16 +1801,30 @@ class ShardedCluster:
             "shards": [snapshot_engine(engine) for engine in self.shards],
             "directory": pairs(self._directory),
             "retired": [report_to_tree(r) for r in self._retired_reports],
+            "replication": self._replication_tree(),
         }
 
+    @_locked
     def load_snapshot(self, tree: dict) -> None:
         """Load a snapshot into this cluster *in place* (shard engines keep
         their identity, so wired-up hooks like ``BlockStore.on_free``
         survive).  Shard count and engine kinds must match; use
-        ``ShardedCluster.restore`` for a from-scratch rebuild."""
+        ``ShardedCluster.restore`` for a from-scratch rebuild.  Poisoned
+        lanes are healed here — reloading a known-good snapshot is the
+        documented alternative to ``fail_shard``/``recover_shard``."""
         from .snapshot import check_engine_compatible, report_from_tree
 
-        self._sync()
+        ex = self._executor
+        if ex is not None:
+            try:
+                ex.barrier()
+                self._workers_dirty = False
+            except ShardWorkerError:
+                # the wedged executor would poison every later submission:
+                # replace it (stop_executor absorbs the sticky fault)
+                self._poisoned.update(ex.failed_shards())
+                self.stop_executor()
+                self.start_executor()
         config = tree["config"]
         if config["num_shards"] != self.num_shards:
             raise ValueError(
@@ -1096,6 +1858,8 @@ class ShardedCluster:
         self._retired_reports = [report_from_tree(r) for r in tree["retired"]]
         self.shard_reports = None
         self._gc_deferred = any(e.store.deferred_reclaim for e in self.shards)
+        self._load_replication(tree.get("replication"))
+        self._poisoned.clear()  # every shard's state was just re-established
 
     @classmethod
     def restore(cls, tree: dict) -> "ShardedCluster":
@@ -1138,6 +1902,9 @@ class ShardedCluster:
         # a snapshot taken mid-GC carries per-store deferred flags; shards
         # grown later must inherit the cluster-wide arming decision
         cluster._gc_deferred = any(e.store.deferred_reclaim for e in cluster.shards)
+        cluster._lock = threading.RLock()
+        cluster._poisoned = {}
+        cluster._load_replication(tree.get("replication"))
         return cluster
 
 

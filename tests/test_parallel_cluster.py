@@ -149,9 +149,17 @@ def test_shard_worker_error_is_sticky_and_propagates():
         ex.submit(0, fail)
         with pytest.raises(ShardWorkerError, match="injected shard fault"):
             ex.barrier()
-        # sticky: the failed executor refuses further work on any shard
+        # sticky and lane-local: the faulted lane refuses further work...
         with pytest.raises(ShardWorkerError):
-            ex.submit(1, lambda: None)
+            ex.submit(0, lambda: None)
+        # ...while healthy lanes keep accepting (one poisoned shard must
+        # not strand a half-scattered chunk) — the fault still re-raises
+        # at every barrier
+        done = []
+        ex.submit(1, lambda: done.append(None))
+        with pytest.raises(ShardWorkerError, match="injected shard fault"):
+            ex.barrier()
+        assert done == [None]
 
 
 def test_barrier_waits_for_all_queued_work():
@@ -166,3 +174,80 @@ def test_barrier_waits_for_all_queued_work():
         for s in range(4):
             seq = [i for sh, i in done if sh == s]
             assert seq == sorted(seq)
+
+
+def test_snapshot_mid_queued_gc_converges():
+    """``run_gc(wait=False)`` + immediate ``snapshot()``: the snapshot must
+    barrier the queued GC steps (as ``resize`` quiesces) so it serializes a
+    consistent post-GC barrier state, and the restored continuation
+    converges with the uninterrupted run."""
+    trace = _overwrite_trace(4_000, seed=31)
+    half = len(trace) // 2
+
+    c = _cluster(4)
+    c.start_executor()
+    c.ingest_batched(trace[:half], batch_size=256, parallel=True)
+    c.run_gc(wait=False)  # queued on the worker lanes, not yet drained
+    snap = json.loads(json.dumps(c.snapshot()))  # must barrier first
+    c.ingest_batched(trace[half:], batch_size=256, parallel=True)
+    original = c.finish()
+    c.stop_executor()
+
+    resumed = ShardedCluster.restore(snap)
+    resumed.ingest_batched(trace[half:], batch_size=256)
+    assert resumed.finish() == original
+
+
+def test_snapshot_thread_races_parallel_ingest_with_queued_gc():
+    """Regression (ISSUE 9): a ``snapshot()`` from another thread while the
+    coordinator ran ``ingest_batched(parallel=True)`` with ``run_gc(
+    wait=False)`` hooks used to serialize mid-mutation — the barrier
+    answered even though queued closures were still being enqueued, so
+    serialization raced worker-side dict mutation ("dictionary changed
+    size during iteration") and could emit torn states.  The coordinator
+    lock makes every entry point atomic: the snapshot thread either runs
+    before or after a whole coordinator call, never inside one."""
+    import threading
+
+    trace = _overwrite_trace(4_000, seed=37)
+    c = _cluster(4)
+    c.start_executor()
+    errors = []
+    snaps = []
+    stop = threading.Event()
+
+    def snapper():
+        while not stop.is_set():
+            try:
+                snaps.append(json.dumps(c.snapshot()))
+            except BaseException as e:  # noqa: BLE001 - the regression signal
+                errors.append(e)
+                return
+
+    th = threading.Thread(target=snapper)
+    th.start()
+    try:
+        for _ in range(4):
+            c.ingest_batched(
+                trace, batch_size=256, parallel=True,
+                on_chunk=lambda i: c.run_gc(wait=False),
+            )
+    finally:
+        stop.set()
+        th.join()
+        c.stop_executor()
+    assert not errors, f"snapshot raced ingest: {errors[0]!r}"
+    # every captured snapshot is a loadable barrier state
+    assert snaps
+    ShardedCluster.restore(json.loads(snaps[-1]))
+    # and the raced run still matches the oracle bit-for-bit
+    oracle = _cluster(4)
+    oracle.start_executor()
+    for _ in range(4):
+        oracle.ingest_batched(
+            trace, batch_size=256, parallel=True,
+            on_chunk=lambda i: oracle.run_gc(wait=False),
+        )
+    got, want = c.finish(), oracle.finish()
+    oracle.stop_executor()
+    assert got == want

@@ -138,6 +138,44 @@ def test_dlru_buffer_divergence_is_out_of_contract():
     assert scalar.finish() == batched.finish()
 
 
+def test_dangling_directory_row_after_unmap_then_shrink():
+    """Regression (ISSUE 9): the routing directory could keep a row pointing
+    at a shard index that no longer exists.  A raw store-level unmap (the
+    shape a partial migration or recovery leaves behind) removed the block
+    from the shard without touching the directory; a subsequent shrink
+    retired only rows for keys the engines still held, so the stale row
+    survived with ``shard >= num_shards`` — and the next read of that key
+    indexed ``self.shards[stale]`` and crashed with ``IndexError``.  The fix
+    scrubs out-of-range rows at shrink and makes the read fallback
+    probe-and-redirect across live shards instead of trusting a clamped
+    stream-hash guess."""
+    from repro.core import ShardedCluster, generate_workload
+    from repro.core.fingerprint import OP_READ
+
+    trace, _ = generate_workload("A", total_requests=2_000, seed=41)
+    c = ShardedCluster(num_shards=4, cache_entries=256, routing="fingerprint")
+    c.replay_batched(trace, batch_size=256)
+
+    lba_bits = 40
+    packed = next(k for k, v in c._directory.items() if v == 3)
+    stream, lba = packed >> lba_bits, packed & ((1 << lba_bits) - 1)
+    # store-level unmap bypasses the coordinator: the directory row for
+    # this key now dangles on shard 3
+    c.shards[3].store.unmap(stream, lba)
+    c.resize(2)
+    assert all(v < 2 for v in c._directory.values())
+
+    # both read paths must route without indexing a dead shard
+    read = np.zeros(1, dtype=trace.dtype)
+    read["ts"] = int(trace["ts"].max()) + 1
+    read["stream"], read["lba"], read["op"] = stream, lba, OP_READ
+    read["fp"] = 1
+    c.ingest_batched(read, batch_size=16)
+    read["ts"] += 1
+    c.replay(read)
+    c.finish()
+
+
 # ---------------------------------------------------------------------------
 # Golden-report regression fixtures (ISSUE 4).
 #

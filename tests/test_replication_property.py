@@ -1,0 +1,139 @@
+"""Hypothesis property tests for replica placement (ISSUE 9).
+
+The placement contract (``ConsistentHashRing.owners_of_many``): for every
+fingerprint the R owners are **distinct physical shards** despite vnodes
+(64 virtual points per shard means naive "next R ring points" would often
+repeat a shard), the first owner is exactly ``shard_of_many``'s primary
+(replication never changes routing decisions), and under a resize the
+primary's minimal-remap property extends to the whole owner set — owner
+rows only change for fingerprints whose ring neighborhood changed.
+Degradation is graceful: R beyond the live shard count clamps with a
+warning, never a silent copy drop.
+"""
+
+import warnings
+
+import numpy as np
+import pytest
+
+from conftest import require_hypothesis
+
+require_hypothesis()
+from hypothesis import given, settings, strategies as st
+
+from repro.core import ConsistentHashRing, ShardedCluster
+
+fps_strategy = st.lists(
+    st.integers(1, 2**64 - 1), min_size=1, max_size=200, unique=True
+)
+
+
+@given(fps_strategy, st.sampled_from([2, 3, 4, 8]), st.integers(1, 8))
+def test_owners_distinct_physical_and_primary_preserved(fps, num_shards, r):
+    r = min(r, num_shards)
+    ring = ConsistentHashRing(num_shards)
+    keys = np.asarray(fps, dtype=np.uint64)
+    owners = ring.owners_of_many(keys, r)
+    assert owners.shape == (len(fps), r)
+    # column 0 IS the routing primary: replication is an overlay, never a
+    # routing change
+    assert np.array_equal(owners[:, 0], ring.shard_of_many(keys))
+    for row in owners:
+        assert len(set(row.tolist())) == r  # distinct physical shards
+        assert all(0 <= int(s) < num_shards for s in row)
+
+
+@given(fps_strategy, st.sampled_from([2, 4]), st.sampled_from([2, 3]))
+def test_owner_sets_remap_minimally_under_grow(fps, num_shards, r):
+    """Consistent hashing's minimal-remap property must survive R > 1: when
+    the ring grows by one shard, a bounded fraction of owner *sets* may
+    change (those whose successor walk meets a new vnode), and every owner
+    row is valid on the new ring — but fingerprints far from any new vnode
+    keep their exact owner row."""
+    grown = num_shards + 1
+    r = min(r, num_shards)
+    old_ring = ConsistentHashRing(num_shards)
+    new_ring = ConsistentHashRing(grown)
+    keys = np.asarray(fps, dtype=np.uint64)
+    old_owners = old_ring.owners_of_many(keys, r)
+    new_owners = new_ring.owners_of_many(keys, r)
+    # primaries obey the classic bound statistically; per sampled batch we
+    # assert the structural part: a changed primary implies the new shard
+    # grabbed it, an unchanged row stays a valid distinct set
+    changed_primary = new_owners[:, 0] != old_owners[:, 0]
+    assert np.all(new_owners[changed_primary, 0] == num_shards), (
+        "a grow may only re-home primaries onto the new shard"
+    )
+    for row in new_owners:
+        assert len(set(row.tolist())) == r
+
+
+@given(st.integers(2, 8), st.integers(1, 8))
+def test_owners_of_many_validates_r(num_shards, r):
+    ring = ConsistentHashRing(num_shards)
+    keys = np.asarray([1, 2, 3], dtype=np.uint64)
+    if 1 <= r <= num_shards:
+        assert ring.owners_of_many(keys, r).shape == (3, r)
+    else:
+        with pytest.raises(ValueError):
+            ring.owners_of_many(keys, r)
+
+
+@settings(deadline=None, max_examples=20)
+@given(st.integers(2, 6), st.integers(1, 6))
+def test_clamp_warns_never_silently_drops(num_shards, extra):
+    """R > live shards: the cluster must clamp to one copy per shard and
+    warn — and still place exactly R_eff - 1 mirror copies per live fp."""
+    factor = num_shards + extra
+    with pytest.warns(RuntimeWarning, match="exceeds"):
+        c = ShardedCluster(
+            num_shards=num_shards,
+            cache_entries=32,
+            routing="fingerprint",
+            replication_factor=factor,
+        )
+    assert c.effective_replication == num_shards
+    streams = np.zeros(40, dtype=np.int64)
+    lbas = np.arange(40, dtype=np.int64)
+    fps = np.arange(1, 41, dtype=np.uint64)
+    c.write_batch(streams, lbas, fps)
+    rep = c.finish()
+    assert c.replica_blocks == (num_shards - 1) * rep.final_disk_blocks
+
+
+@settings(deadline=None, max_examples=15)
+@given(
+    st.lists(
+        st.tuples(st.integers(0, 3), st.integers(0, 15), st.integers(1, 30)),
+        min_size=10,
+        max_size=120,
+    ),
+    st.sampled_from([2, 3]),
+)
+def test_resize_preserves_replication_invariant(writes, factor):
+    """Random write batches, then a grow: after the topology change the
+    mirrors must hold exactly R_eff - 1 copies of every live fingerprint
+    on the *new* ring (the wholesale resync contract)."""
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", RuntimeWarning)
+        c = ShardedCluster(
+            num_shards=2, cache_entries=32, routing="fingerprint",
+            replication_factor=factor,
+        )
+    streams = np.asarray([w[0] for w in writes], dtype=np.int64)
+    lbas = np.asarray([w[1] for w in writes], dtype=np.int64)
+    fps = np.asarray([w[2] for w in writes], dtype=np.uint64)
+    c.write_batch(streams, lbas, fps)
+    c.resize(4)
+    rep = c.finish()
+    assert c.replica_blocks == (min(factor, 4) - 1) * rep.final_disk_blocks
+    # every mirror copy lives on a shard the ring actually names as a
+    # successor of the content's primary
+    r = c.effective_replication
+    for s, rs in enumerate(c._replicas):
+        for fp, count in rs.copies.items():
+            if count > 0:
+                owners = c.ring.owners_of_many(
+                    np.asarray([fp], dtype=np.uint64), r
+                )[0].tolist()
+                assert s in owners[1:]
