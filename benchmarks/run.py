@@ -6,12 +6,13 @@ Prints ``name,us_per_call,derived`` CSV rows (per the repo convention):
 primary timing where meaningful (0 for ratio-style results), ``derived``
 packs the figure's headline quantity.
 
-``--suite`` runs the five standalone gated benches (replay throughput,
-cluster scaling, resharding, fingerprint index, serving latency) as
+``--suite`` runs the standalone gated benches (fingerprint index, CDC,
+replay throughput, cluster scaling, resharding, GC, serving latency,
+replication) as
 subprocesses — each still writes its own ``BENCH_*.json`` — and merges
 every payload plus each bench's gate verdict into one
 ``BENCH_summary.json``, so the perf trajectory across PRs is one file
-instead of five.  Exit code 1 if any bench's gate failed.
+instead of eight.  Exit code 1 if any bench's gate failed.
 
 Usage:
     PYTHONPATH=src python -m benchmarks.run [--full] [--only fig6,...]
@@ -32,6 +33,7 @@ from . import kernel_bench, paper_validation, roofline
 # (suite name, script, emitted JSON) — run order is cheap-first
 SUITE = [
     ("fp_index", "benchmarks/fp_index.py", "BENCH_fp_index.json"),
+    ("cdc", "benchmarks/cdc.py", "BENCH_cdc.json"),
     ("replay", "benchmarks/replay_throughput.py", "BENCH_replay.json"),
     ("cluster", "benchmarks/cluster_scaling.py", "BENCH_cluster.json"),
     ("resharding", "benchmarks/resharding.py", "BENCH_resharding.json"),

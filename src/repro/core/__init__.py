@@ -21,6 +21,10 @@ Public surface:
 * ``BlockStore`` / ``PostProcessEngine`` — storage substrate + exact phase.
 * baselines: ``make_idedup``, ``PurePostProcessing``, ``DIODE``.
 * ``generate_workload`` — FIU-like synthetic multi-tenant traces.
+* ``ContentDefinedChunker`` — content-defined chunking of raw byte streams
+  (Gear rolling hash on-device, ``kernels.cdc``) into ``ReplayBatch``
+  columns; ``chunk_boundaries_scalar`` is its reference oracle
+  (``core.cdc``).
 """
 
 from typing import Protocol, runtime_checkable
@@ -36,6 +40,12 @@ from .batch_replay import (
     run_replay,
 )
 from .cache import ARCCache, GlobalCache, LFUCache, LRUCache, PrioritizedCache
+from .cdc import (
+    CDCConfig,
+    ContentDefinedChunker,
+    chunk_boundaries_scalar,
+    select_boundaries,
+)
 from .cluster import (
     ConsistentHashRing,
     ParallelShardExecutor,
@@ -120,6 +130,10 @@ __all__ = [
     "DIODE",
     "PurePostProcessing",
     "make_idedup",
+    "CDCConfig",
+    "ContentDefinedChunker",
+    "chunk_boundaries_scalar",
+    "select_boundaries",
     "ARCCache",
     "GlobalCache",
     "LFUCache",

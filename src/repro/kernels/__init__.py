@@ -5,6 +5,9 @@
 * ``histogram``    — fingerprint-frequency histogram (FFH) reduction.
 * ``fp_index``     — exact open-addressing fingerprint-index probe/insert
   over uint32 lanes (the membership layer under ``core.fp_index``).
+* ``cdc``          — content-defined chunking boundary candidates: the Gear
+  rolling hash recast as a windowed sum so candidate flags are data-parallel
+  (the sequential min/max selection stays host-side in ``core.cdc``).
 * ``paged_attention`` — decode attention over the dedup-paged KV cache
   (the serving-side hot-spot that HPDedup's page indirection creates).
 
@@ -13,7 +16,11 @@ dispatch); ``ref`` holds pure-jnp oracles plus an independent numpy golden
 model for the hash.
 """
 
+from .cdc import gear_table, pack_haloed, unpack_candidates
 from .ops import (
+    cdc_candidate_flags,
+    cdc_chunk_fingerprints,
+    chunk_fp64,
     ffh_counts,
     fingerprint_blocks,
     fingerprint_ints,
@@ -24,11 +31,17 @@ from .ops import (
 from .paged_attention import paged_attention
 
 __all__ = [
+    "cdc_candidate_flags",
+    "cdc_chunk_fingerprints",
+    "chunk_fp64",
     "ffh_counts",
     "fingerprint_blocks",
     "fingerprint_ints",
     "fp_index_insert",
     "fp_index_probe",
     "fp_index_remove",
+    "gear_table",
+    "pack_haloed",
     "paged_attention",
+    "unpack_candidates",
 ]

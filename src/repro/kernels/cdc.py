@@ -1,0 +1,187 @@
+"""Pallas TPU kernel: content-defined chunking boundary candidates.
+
+The paper's traces arrive pre-chunked into fixed 4 KB blocks; realistic
+primary-storage streams (VM images, container layers, log appends) need
+content-defined chunking so an insert/delete shifts at most O(1) chunk
+boundaries instead of re-aligning every block after the edit.  The classic
+formulation (Gear / FastCDC) is a rolling hash
+
+    h_i = (h_{i-1} << 1 + GEAR[b_i]) mod 2^32,    cut candidate iff
+    (h_i & (avg_size - 1)) == 0
+
+— a strictly serial recurrence, which is exactly the wrong shape for a
+vector unit.  The trick this kernel exploits: because the shift is by one
+bit, every byte older than 32 positions has been shifted out entirely, so
+the recurrence equals a *windowed* sum
+
+    h_i = sum_{j=0}^{31} GEAR[b_{i-j}] << j      (mod 2^32, b_k = 0 for k<0)
+
+which is position-independent — every byte position's hash is computable in
+parallel from its trailing 32-byte window.  The kernel evaluates the 32-term
+sum as a static unroll of slice-shift-adds over uint32 lane arrays and emits
+one candidate bit per byte; the (cheap, O(#chunks)) greedy min/max boundary
+selection stays on the host, shared verbatim by every backend
+(``core.cdc.select_boundaries``).
+
+Layout: byte streams are packed host-side into rows of ``SEG_BYTES`` payload
+bytes, each prefixed by a ``HALO_BYTES`` halo carrying the previous row's
+tail so windows spanning a row boundary see their full history
+(``pack_haloed``).  Rows are little-endian uint32 words — 4 byte "phases"
+per word — and tile at ``TILE_R`` rows per grid step, so capacity is
+HBM-bound like ``fp_index``, not VMEM-bound.  Output is one uint32 word per
+payload word with candidate flags for its 4 bytes packed in bits 0..3.
+
+The GEAR table is itself derived from the fingerprint kernel's avalanche mix
+(``GEAR[b] = avalanche32(b * PRIME1 + GEAR_SEED)``): the device computes it
+inline elementwise (no 256-entry gather on the VPU), the host fallbacks use
+the precomputed ``gear_table()`` — identical values by construction.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+from .fingerprint import PRIME1, PRIME2, PRIME3
+
+SEG_BYTES = 2048      # payload bytes per row
+SEG_WORDS = SEG_BYTES // 4
+HALO_BYTES = 32       # previous row's tail carried per row (= WINDOW)
+HALO_WORDS = HALO_BYTES // 4
+TILE_R = 32           # rows per grid step: (32, 520) uint32 ~ 65 KiB VMEM in
+WINDOW = 32           # rolling-hash window: 1-bit shifts vanish after 32 steps
+GEAR_SEED = 0x1F83D9AB
+
+
+def gear_table() -> np.ndarray:
+    """The 256-entry Gear table, host-side (numpy uint32, wrapping)."""
+    h = np.arange(256, dtype=np.uint32) * np.uint32(PRIME1) + np.uint32(GEAR_SEED)
+    h ^= h >> np.uint32(15)
+    h *= np.uint32(PRIME2)
+    h ^= h >> np.uint32(13)
+    h *= np.uint32(PRIME3)
+    h ^= h >> np.uint32(16)
+    return h
+
+
+def _gear_mix(b: jnp.ndarray) -> jnp.ndarray:
+    """Device-side GEAR[b]: same mix as ``gear_table`` elementwise."""
+    h = b * jnp.uint32(PRIME1) + jnp.uint32(GEAR_SEED)
+    h = h ^ jax.lax.shift_right_logical(h, jnp.uint32(15))
+    h = h * jnp.uint32(PRIME2)
+    h = h ^ jax.lax.shift_right_logical(h, jnp.uint32(13))
+    h = h * jnp.uint32(PRIME3)
+    h = h ^ jax.lax.shift_right_logical(h, jnp.uint32(16))
+    return h
+
+
+def _cdc_kernel(x_ref, o_ref, *, avg_size: int):
+    """One (TILE_R, HALO_WORDS + SEG_WORDS) tile -> (TILE_R, SEG_WORDS) flags.
+
+    For payload byte phase ``k`` of word ``t``, term ``j`` of the windowed
+    sum reads stream byte ``(t*4 + k) - j``; writing ``k - j = 4q + c``
+    (``c = (k - j) & 3``, ``q in [-8, 0]``) that byte is phase ``c`` of word
+    ``t + q`` — a static column slice into the gear-mixed phase arrays, so
+    the whole 32-term sum is unrolled shifts and adds with no gather.
+    """
+    x = x_ref[...]
+    g = []
+    for c in range(4):
+        byte = jax.lax.shift_right_logical(x, jnp.uint32(8 * c)) & jnp.uint32(0xFF)
+        g.append(_gear_mix(byte))
+    mask = jnp.uint32(avg_size - 1)
+    sw = x.shape[1] - HALO_WORDS
+    out = jnp.zeros((x.shape[0], sw), dtype=jnp.uint32)
+    for k in range(4):
+        h = jnp.zeros((x.shape[0], sw), dtype=jnp.uint32)
+        for j in range(WINDOW):
+            m = k - j
+            c = m & 3
+            q = (m - c) >> 2
+            col = HALO_WORDS + q
+            h = h + (g[c][:, col:col + sw] << jnp.uint32(j))
+        cand = ((h & mask) == 0).astype(jnp.uint32)
+        out = out | (cand << jnp.uint32(k))
+    o_ref[...] = out
+
+
+def cdc_candidates_pallas(haloed: jnp.ndarray, avg_size: int, *,
+                          interpret: bool = False) -> jnp.ndarray:
+    """Candidate flags for packed haloed rows.
+
+    ``haloed`` is (R, HALO_WORDS + SEG_WORDS) uint32 from ``pack_haloed``
+    with R a multiple of TILE_R; returns (R, SEG_WORDS) uint32 with bit k of
+    word t flagging payload byte ``t*4 + k`` as a cut candidate.
+    """
+    r, wtot = haloed.shape
+    if wtot != HALO_WORDS + SEG_WORDS:
+        raise ValueError(f"row width {wtot} != HALO_WORDS + SEG_WORDS = {HALO_WORDS + SEG_WORDS}")
+    if r % TILE_R:
+        raise ValueError(f"R={r} must be a multiple of TILE_R={TILE_R}")
+    if avg_size & (avg_size - 1) or avg_size < 2:
+        raise ValueError(f"avg_size must be a power of two >= 2, got {avg_size}")
+    return pl.pallas_call(
+        functools.partial(_cdc_kernel, avg_size=avg_size),
+        out_shape=jax.ShapeDtypeStruct((r, SEG_WORDS), jnp.uint32),
+        grid=(r // TILE_R,),
+        in_specs=[pl.BlockSpec((TILE_R, wtot), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((TILE_R, SEG_WORDS), lambda i: (i, 0)),
+        interpret=interpret,
+    )(haloed)
+
+
+def pack_haloed(buffers) -> tuple[np.ndarray, list[tuple[int, int, int]]]:
+    """Pack byte buffers into the kernel's haloed row layout.
+
+    Returns ``(rows, spans)``: ``rows`` is (R_pad, HALO_WORDS + SEG_WORDS)
+    uint32 (little-endian packed, R_pad a TILE_R multiple, zero-padded) and
+    ``spans[i] = (row_start, n_rows, n_bytes)`` locates buffer ``i``'s rows.
+    Each buffer starts on a fresh row with a zero halo — buffers never share
+    window history, matching the zero-prefix hash contract — and row ``r``'s
+    halo is the same buffer's bytes ``[r*SEG_BYTES - 32, r*SEG_BYTES)``.
+    """
+    parts = []
+    spans = []
+    row = 0
+    for buf in buffers:
+        data = np.ascontiguousarray(buf, dtype=np.uint8).reshape(-1)
+        n = data.size
+        n_rows = -(-n // SEG_BYTES)
+        spans.append((row, n_rows, n))
+        if n_rows == 0:
+            continue
+        padded = np.zeros(n_rows * SEG_BYTES, dtype=np.uint8)
+        padded[:n] = data
+        halo = np.zeros((n_rows, HALO_BYTES), dtype=np.uint8)
+        if n_rows > 1:
+            tails = padded[: (n_rows - 1) * SEG_BYTES].reshape(n_rows - 1, SEG_BYTES)
+            halo[1:] = tails[:, -HALO_BYTES:]
+        parts.append(np.concatenate([halo, padded.reshape(n_rows, SEG_BYTES)], axis=1))
+        row += n_rows
+    pad_rows = (-row) % TILE_R
+    if pad_rows or row == 0:
+        pad_rows = pad_rows or TILE_R
+        parts.append(np.zeros((pad_rows, HALO_BYTES + SEG_BYTES), dtype=np.uint8))
+    rows = np.concatenate(parts, axis=0)
+    return rows.view("<u4"), spans
+
+
+def unpack_candidates(flags: np.ndarray, span: tuple[int, int, int]) -> np.ndarray:
+    """Candidate byte positions for one buffer from the kernel's flag words.
+
+    ``flags`` is the full (R, SEG_WORDS) uint32 output; ``span`` is the
+    buffer's ``(row_start, n_rows, n_bytes)`` from ``pack_haloed``.  Flag bit
+    k of word t in row r is stream byte ``r*SEG_BYTES + t*4 + k`` — the
+    little-endian byte-in-word order the packing used.
+    """
+    row0, n_rows, n = span
+    if n_rows == 0:
+        return np.empty(0, dtype=np.int64)
+    w = flags[row0:row0 + n_rows]
+    bits = (w[:, :, None] >> np.arange(4, dtype=np.uint32)[None, None, :]) & np.uint32(1)
+    flat = bits.reshape(-1)[:n]
+    return np.nonzero(flat)[0]

@@ -13,6 +13,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from .cdc import HALO_WORDS, cdc_candidates_pallas
 from .fingerprint import LANES, NUM_HASHES, TILE_B, fingerprint_pallas
 from .fp_index import (
     TILE_KEYS,
@@ -71,18 +72,112 @@ def fingerprint_blocks(blocks, interpret: bool | None = None) -> jnp.ndarray:
     return _fingerprint_jit(blocks, interpret)[:b]
 
 
-def fingerprint_ints(blocks, interpret: bool | None = None) -> np.ndarray:
-    """(B,) uint64 fingerprints for the host-side dedup engines.
-
-    Folds the 128-bit kernel output to 64 bits (two words verbatim, two mixed
-    in) — collision probability ~2^-64 per pair.
-    """
-    fp = np.asarray(fingerprint_blocks(blocks, interpret=interpret), dtype=np.uint64)
+def _fold64(fp128: np.ndarray) -> np.ndarray:
+    """Fold (B, NUM_HASHES) uint32 kernel output to (B,) uint64 (two words
+    verbatim, two mixed in) — collision probability ~2^-64 per pair.  The
+    zero guard stays with the callers (CDC mixes the length in first)."""
+    fp = np.asarray(fp128, dtype=np.uint64)
     lo = fp[:, 0] ^ (fp[:, 2] * np.uint64(0x9E3779B97F4A7C15) & np.uint64(0xFFFFFFFFFFFFFFFF))
     hi = fp[:, 1] ^ fp[:, 3]
-    out = (hi << np.uint64(32)) | (lo & np.uint64(0xFFFFFFFF))
+    return (hi << np.uint64(32)) | (lo & np.uint64(0xFFFFFFFF))
+
+
+def fingerprint_ints(blocks, interpret: bool | None = None) -> np.ndarray:
+    """(B,) uint64 fingerprints for the host-side dedup engines."""
+    out = _fold64(fingerprint_blocks(blocks, interpret=interpret))
     out[out == 0] = 1  # 0 is reserved
     return out
+
+
+def _mix_len64(lens: np.ndarray) -> np.ndarray:
+    """splitmix64 of chunk lengths: XORed into chunk fingerprints so two
+    chunks whose zero-padded images coincide (one is the other plus trailing
+    zeros) still hash apart."""
+    z = np.asarray(lens, dtype=np.uint64) + np.uint64(0x9E3779B97F4A7C15)
+    z = (z ^ (z >> np.uint64(30))) * np.uint64(0xBF58476D1CE4E5B9)
+    z = (z ^ (z >> np.uint64(27))) * np.uint64(0x94D049BB133111EB)
+    return z ^ (z >> np.uint64(31))
+
+
+def chunk_fp64(fp128, lens) -> np.ndarray:
+    """(C,) uint64 chunk fingerprints from kernel output + true lengths.
+
+    Shared by every CDC backend (fused device, numpy, scalar oracle) so the
+    fold/length-mix is identical by construction."""
+    out = _fold64(fp128) ^ _mix_len64(lens)
+    out[out == 0] = 1  # 0 is reserved
+    return out
+
+
+@functools.partial(jax.jit, static_argnames=("avg_size", "interpret"))
+def _cdc_candidates_jit(haloed: jnp.ndarray, avg_size: int, interpret: bool) -> jnp.ndarray:
+    return cdc_candidates_pallas(haloed, avg_size, interpret=interpret)
+
+
+def cdc_candidate_flags(haloed, avg_size: int, interpret: bool | None = None) -> jnp.ndarray:
+    """Candidate-flag words for haloed CDC rows (see ``kernels.cdc``).
+
+    Accepts a host array or a device-resident one (the fused path uploads
+    once and reuses the same buffer for the chunk-fingerprint launch).
+    """
+    haloed = jnp.asarray(haloed)
+    interpret = (not _on_tpu()) if interpret is None else interpret
+    return _cdc_candidates_jit(haloed, avg_size, interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("w_pad", "interpret"))
+def _chunk_fp_jit(haloed: jnp.ndarray, starts: jnp.ndarray, lens: jnp.ndarray,
+                  w_pad: int, interpret: bool) -> jnp.ndarray:
+    """Fused gather + fingerprint over device-resident CDC rows.
+
+    ``starts``/``lens`` are global byte offsets/lengths into the concatenated
+    payload stream (rows' payload columns, flattened).  Chunk starts are not
+    word-aligned, so the gather works at byte granularity: unpack the payload
+    words to a flat byte stream, gather each chunk's ``w_pad * 4`` window
+    (zero-masked past its true length), repack little-endian words, and run
+    the fingerprint kernel — all inside one jit, no host round-trip.
+    """
+    payload = haloed[:, HALO_WORDS:].reshape(-1)
+    phases = [jax.lax.shift_right_logical(payload, jnp.uint32(8 * c)) & jnp.uint32(0xFF)
+              for c in range(4)]
+    bytes_flat = jnp.stack(phases, axis=1).reshape(-1)
+    span = jnp.arange(w_pad * 4, dtype=jnp.int32)[None, :]
+    valid = span < lens[:, None]
+    idx = jnp.where(valid, starts[:, None] + span, 0)
+    b = jnp.where(valid, bytes_flat[idx], jnp.uint32(0))
+    b4 = b.reshape(b.shape[0], w_pad, 4)
+    words = (b4[:, :, 0]
+             | (b4[:, :, 1] << jnp.uint32(8))
+             | (b4[:, :, 2] << jnp.uint32(16))
+             | (b4[:, :, 3] << jnp.uint32(24)))
+    return fingerprint_pallas(words, interpret=interpret)
+
+
+def cdc_chunk_fingerprints(haloed, starts, lens, max_size: int,
+                           interpret: bool | None = None) -> np.ndarray:
+    """(C,) uint64 fingerprints for chunks of device-resident CDC rows.
+
+    Every chunk is zero-padded to ``max_size`` bytes (``w_pad`` words) before
+    hashing, so all backends hash identical padded images; the true length is
+    mixed into the fold (``chunk_fp64``).  ``max_size`` must make ``w_pad`` a
+    LANES multiple (``core.cdc`` validates ``max_size % 512 == 0``).
+    """
+    starts = np.ascontiguousarray(starts, dtype=np.int32)
+    lens = np.ascontiguousarray(lens, dtype=np.int32)
+    c = starts.size
+    if c == 0:
+        return np.empty(0, dtype=np.uint64)
+    w_pad = max_size // 4
+    if w_pad % LANES:
+        raise ValueError(f"max_size={max_size} must be a multiple of {LANES * 4}")
+    pad = (-c) % TILE_B
+    if pad:
+        starts = np.concatenate([starts, np.zeros(pad, dtype=np.int32)])
+        lens = np.concatenate([lens, np.zeros(pad, dtype=np.int32)])
+    interpret = (not _on_tpu()) if interpret is None else interpret
+    fp128 = _chunk_fp_jit(jnp.asarray(haloed), jnp.asarray(starts), jnp.asarray(lens),
+                          w_pad, interpret)
+    return chunk_fp64(np.asarray(fp128)[:c], lens[:c])
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))

@@ -110,3 +110,69 @@ def test_uint8_tail_byte_sensitivity():
         x = base.copy()
         x[0, pos] = 0xA5
         assert fingerprint_ints(x)[0] != ref, f"byte {pos} did not change the digest"
+
+
+# ---------------------------------------------------------------------------
+# Golden CDC chunk boundaries + chunk fingerprints.  Pins the Gear table,
+# the windowed-sum hash, the greedy selection rule AND the chunk-fingerprint
+# fold for deterministic buffers — every stored chunk fingerprint derives
+# from these, so a silent change to any of them must be loud.  Sizes cover
+# the kernel layout edges: empty, sub-min-chunk, exactly one row
+# (SEG_BYTES), not a multiple of the row/lane width, and multi-row.
+# Regenerate only for a deliberate chunking/hash change:
+#
+#     PYTHONPATH=src python - <<'PY'
+#     import json
+#     from tests.test_kernels_golden import CDC_GOLDEN_PATH, _cdc_buffer, CDC_CASES, CDC_CFG
+#     from repro.core.cdc import ContentDefinedChunker
+#     ck = ContentDefinedChunker(*CDC_CFG, backend="scalar")
+#     cases = []
+#     for name, n, salt in CDC_CASES:
+#         ends, fps = ck.chunk_fingerprints(_cdc_buffer(name, n, salt))
+#         cases.append({"name": name, "n": n, "salt": salt, "ends": ends.tolist(),
+#                       "fp64_hex": [f"{int(v):016x}" for v in fps]})
+#     json.dump({"comment": "see test_kernels_golden.py", "cfg": list(CDC_CFG),
+#                "cases": cases}, open(CDC_GOLDEN_PATH, "w"), indent=2)
+#     PY
+# ---------------------------------------------------------------------------
+
+CDC_GOLDEN_PATH = os.path.join(os.path.dirname(__file__), "golden", "cdc_digests.json")
+CDC_CFG = (256, 1024, 4096)  # (min_size, avg_size, max_size)
+CDC_CASES = [
+    ("mix", 0, 1), ("mix", 100, 2), ("mix", 1000, 3), ("mix", 2048, 4),
+    ("mix", 5000, 5), ("mix", 40000, 6), ("repeat", 7000, 7),
+]
+
+
+def _cdc_mix_bytes(n: int, salt: int) -> np.ndarray:
+    """Deterministic high-entropy bytes from pure uint64 arithmetic (no RNG
+    library dependence — golden values must never move with numpy)."""
+    i = np.arange(n, dtype=np.uint64)
+    v = i * np.uint64(2654435761) + np.uint64(salt) * np.uint64(40503) + np.uint64(11)
+    v = (v ^ (v >> np.uint64(13))) * np.uint64(0x9E3779B97F4A7C15)
+    return ((v >> np.uint64(29)) & np.uint64(0xFF)).astype(np.uint8)
+
+
+def _cdc_buffer(name: str, n: int, salt: int) -> np.ndarray:
+    if name == "mix":
+        return _cdc_mix_bytes(n, salt)
+    # "repeat": a duplicated segment, so golden fp64 values repeat in-buffer
+    half = _cdc_mix_bytes(n // 2, salt)
+    return np.concatenate([half, half])
+
+
+def _cdc_golden_cases():
+    with open(CDC_GOLDEN_PATH) as f:
+        return json.load(f)["cases"]
+
+
+@pytest.mark.parametrize("backend", ["scalar", "numpy", "pallas"])
+@pytest.mark.parametrize("case", _cdc_golden_cases(),
+                         ids=lambda c: f"{c['name']}_{c['n']}")
+def test_cdc_digests_pinned(case, backend):
+    from repro.core.cdc import ContentDefinedChunker
+
+    ck = ContentDefinedChunker(*CDC_CFG, backend=backend)
+    ends, fps = ck.chunk_fingerprints(_cdc_buffer(case["name"], case["n"], case["salt"]))
+    assert ends.tolist() == case["ends"]
+    assert [f"{int(v):016x}" for v in fps] == case["fp64_hex"]

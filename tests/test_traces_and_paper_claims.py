@@ -65,3 +65,45 @@ def test_diode_runs_and_is_exact():
     rep = d.finish()
     assert rep.final_disk_blocks == rep.unique_fingerprints
     assert 0.0 < rep.inline_dedup_ratio < 1.0
+
+
+# ---------------------------------------------------------------------------
+# trace_stats chunk-level summaries for byte-backed traces (CDC ingest).
+# ---------------------------------------------------------------------------
+
+
+def test_trace_stats_chunk_summaries():
+    from repro.core.cdc import ContentDefinedChunker
+    from repro.data.byte_workloads import byte_trace, log_append_workload
+
+    w = log_append_workload(num_streams=1, snapshots=3, append_size=32 * 1024, seed=5)
+    ck = ContentDefinedChunker(256, 1024, 4096)
+    trace, lens = byte_trace(ck, w)
+    st = trace_stats(trace, chunk_bytes=lens)
+
+    assert st["chunk_count"] == len(trace)
+    assert st["chunk_bytes_total"] == w.total_bytes == int(lens.sum())
+    assert 0 < st["chunk_size_min"] <= st["chunk_size_p50"] <= st["chunk_size_max"] <= 4096
+    assert abs(st["chunk_size_mean"] - w.total_bytes / len(trace)) < 1e-9
+    # log2 histogram partitions the chunk population
+    assert sum(st["chunk_size_hist_log2"].values()) == len(trace)
+    assert all(8 <= int(k) <= 12 for k in st["chunk_size_hist_log2"])  # 256..4096
+    # byte-weighted duplication structure: unique + dup partitions the bytes
+    assert st["unique_bytes"] + st["dup_bytes"] == w.total_bytes
+    assert 0.0 < st["byte_dup_ratio"] < 1.0
+    # a re-ingested log's max fp occurrence equals the snapshot count
+    assert st["fp_max_occurrences"] == 3
+    assert st["fp_mean_occurrences"] >= 1.0
+    # chunk-count dup ratio and byte dup ratio describe the same structure
+    assert abs(st["dup_ratio"] - st["byte_dup_ratio"]) < 0.05
+
+    # alignment is enforced
+    with pytest.raises(ValueError):
+        trace_stats(trace, chunk_bytes=lens[:-1])
+
+
+def test_trace_stats_without_chunks_unchanged():
+    """The fixed-block path must not grow chunk keys (callers iterate it)."""
+    trace, _ = generate_workload("A", total_requests=5_000, seed=4)
+    st = trace_stats(trace)
+    assert "chunk_count" not in st and "byte_dup_ratio" not in st
